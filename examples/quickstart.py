@@ -1,0 +1,29 @@
+"""Quickstart: optimize one production kernel with the Astra multi-agent
+loop (Algorithm 1) and reintegrate it into the framework.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import optimize, reintegrate
+from repro.kernels import ops
+
+# 1. Run Algorithm 1 on the SwiGLU kernel (paper Kernel 3): the testing
+#    agent builds a production-shape suite, the profiling agent evaluates
+#    the TPU-v5e cost model, the planning agent attacks the dominant
+#    roofline term, the coding agent applies the knob moves.
+log = optimize("silu_and_mul", rounds=5, verbose=True)
+print()
+print(log.table())
+print(f"\nspeedup over baseline: {log.speedup():.2f}x")
+
+# 2. Reintegrate (paper §3.2 post-processing): the tuned variant becomes
+#    the framework-wide kernel — every model's MLP now uses it.
+reintegrate({"silu_and_mul": log})
+print(f"installed: {ops.get_variant('silu_and_mul').describe()}")
+
+# 3. Use it through the public op (Pallas interpret on CPU).
+x = jax.random.normal(jax.random.PRNGKey(0), (8, 1024), jnp.bfloat16)
+y = ops.silu_and_mul(x, impl="pallas")
+print(f"silu_and_mul({x.shape}) -> {y.shape} {y.dtype}")

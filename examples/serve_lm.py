@@ -1,0 +1,9 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine (prefill + KV-cache decode; the decode path consumes the
+flash-decode kernel whose combiner is paper Kernel 1).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import run
+
+run(arch="qwen2-0.5b", requests=6, slots=3, max_new=8, max_seq=128)

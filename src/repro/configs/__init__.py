@@ -1,0 +1,35 @@
+"""One config per assigned architecture. ``get(name)`` accepts the
+assignment ids (dashes); ``smoke(name)`` returns the reduced same-family
+config used by CPU smoke tests."""
+
+from repro.configs import (chameleon_34b, granite_moe_3b_a800m,
+                           h2o_danube_1_8b, olmoe_1b_7b, qwen2_0_5b,
+                           qwen3_8b, recurrentgemma_2b,
+                           seamless_m4t_large_v2, xlstm_1_3b, yi_34b)
+from repro.configs.base import (LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+                                DECODE_32K, ModelConfig, ShapeSpec,
+                                cells_for, long_context_ok)
+
+_MODULES = {
+    "qwen2-0.5b": qwen2_0_5b,
+    "yi-34b": yi_34b,
+    "qwen3-8b": qwen3_8b,
+    "h2o-danube-1.8b": h2o_danube_1_8b,
+    "xlstm-1.3b": xlstm_1_3b,
+    "chameleon-34b": chameleon_34b,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "seamless-m4t-large-v2": seamless_m4t_large_v2,
+    "recurrentgemma-2b": recurrentgemma_2b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+CONFIGS = {k: m.CONFIG for k, m in _MODULES.items()}
+
+
+def get(name: str) -> ModelConfig:
+    return CONFIGS[name]
+
+
+def smoke(name: str) -> ModelConfig:
+    return _MODULES[name].smoke()

@@ -1,0 +1,126 @@
+"""Model/run configuration schema shared by all architectures.
+
+Every assigned architecture is a ``ModelConfig`` in ``repro/configs/<id>.py``
+(exact dims from the assignment) plus a ``smoke()`` reduction of the same
+family for CPU tests. Input shapes are the four assigned cells
+(train_4k / prefill_32k / decode_32k / long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | xlstm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    # dense-attention options
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: Optional[int] = None          # sliding-window attention
+    rope_theta: float = 10000.0
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    expert_ff: int = 0                    # d_ff per expert
+    capacity_factor: float = 1.25
+
+    # hybrid (recurrentgemma): layer pattern period — indices of attention
+    # layers within each period; others are RG-LRU recurrent blocks.
+    period: int = 0
+    attn_in_period: tuple = ()
+    conv_width: int = 4
+    lru_width: int = 0
+
+    # xlstm: blocks alternate (mLSTM, sLSTM) within each scanned period
+    slstm_every: int = 0                  # 0 = all mLSTM
+
+    # enc-dec
+    enc_layers: int = 0                   # 0 = decoder-only
+
+    # modality frontend stub (audio/vlm): train/prefill inputs are
+    # precomputed frame/patch embeddings instead of token ids
+    frontend: str = "tokens"              # tokens | frames
+
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+
+    # --- derived ---
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        # vocab padded to a multiple of 256 so it shards over the model axis
+        # (granite's 49155 / seamless's 256206 are not divisible by 16)
+        return pad_to(self.vocab, 256)
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def activated_params(self) -> int:
+        """~N for 6·N·D MODEL_FLOPS accounting (MoE: active experts only)."""
+        d, L = self.d_model, self.n_layers
+        emb = self.padded_vocab * d * (1 if self.enc_layers else 2)
+        att = L * d * (self.n_heads + 2 * self.n_kv_heads) * self.head_dim \
+            + L * self.n_heads * self.head_dim * d
+        if self.family == "moe":
+            mlp = L * 3 * d * self.expert_ff * self.top_k \
+                + L * d * self.n_experts          # router
+        elif self.family == "xlstm":
+            att = L * d * d * 4                   # qkv+o equivalents & gates
+            mlp = 0
+        else:
+            mlp = L * 3 * d * self.d_ff
+        if self.enc_layers:
+            att += self.enc_layers * 4 * d * d + self.n_layers * 4 * d * d
+            mlp += self.enc_layers * 3 * d * self.d_ff
+        return emb + att + mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def long_context_ok(cfg: ModelConfig) -> bool:
+    """long_500k runs only for sub-quadratic mixers (SSM / hybrid / SWA)."""
+    return cfg.family in ("xlstm", "hybrid") or cfg.window is not None
+
+
+def cells_for(cfg: ModelConfig) -> list[ShapeSpec]:
+    cells = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if long_context_ok(cfg):
+        cells.append(LONG_500K)
+    return cells

@@ -1,0 +1,14 @@
+"""chameleon-34b [vlm] — early-fusion; VQ image tokens are ordinary ids in
+the unified 65536 vocab, so the modality frontend stub provides token ids
+[arXiv:2405.09818]. Backbone = dense transformer with qk-norm."""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", family="dense", n_layers=48, d_model=8192,
+    n_heads=64, n_kv_heads=8, d_ff=22016, vocab=65536, qk_norm=True)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(CONFIG, n_layers=2, d_model=128, n_heads=4,
+                               n_kv_heads=2, d_ff=256, vocab=512)

@@ -1,0 +1,13 @@
+"""h2o-danube-1.8b [dense] — llama+mistral mix, sliding-window attention
+[arXiv:2401.16818; hf]. SWA makes it sub-quadratic -> long_500k runs."""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-1.8b", family="dense", n_layers=24, d_model=2560,
+    n_heads=32, n_kv_heads=8, d_ff=6912, vocab=32000, window=4096)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(CONFIG, n_layers=2, d_model=128, n_heads=4,
+                               n_kv_heads=2, d_ff=256, vocab=512, window=64)

@@ -1,0 +1,15 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec backbone; audio frontend is a
+STUB (input_specs provides precomputed frame embeddings)
+[arXiv:2308.11596; hf]."""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="encdec", n_layers=24,
+    d_model=1024, n_heads=16, n_kv_heads=16, d_ff=8192, vocab=256206,
+    enc_layers=24, frontend="frames")
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(CONFIG, n_layers=2, enc_layers=2, d_model=64,
+                               n_heads=2, n_kv_heads=2, d_ff=128, vocab=256)

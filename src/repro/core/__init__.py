@@ -1,0 +1,17 @@
+"""Astra core — the paper's contribution: a multi-agent system that
+optimizes production kernels through iterative generation, testing,
+profiling, and planning (Algorithm 1)."""
+
+from repro.core.agents import (CodingAgent, PlanningAgent, ProfilingAgent,
+                               Suggestion, TestingAgent)
+from repro.core.loop import optimize, optimize_all, reintegrate
+from repro.core.oplog import Log, LogEntry
+from repro.core.single_agent import optimize_single_agent
+from repro.core.variants import SPACES, KernelSpace, Knob, make_inputs
+
+__all__ = [
+    "CodingAgent", "PlanningAgent", "ProfilingAgent", "TestingAgent",
+    "Suggestion", "optimize", "optimize_all", "reintegrate",
+    "Log", "LogEntry", "optimize_single_agent",
+    "SPACES", "KernelSpace", "Knob", "make_inputs",
+]

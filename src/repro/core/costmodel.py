@@ -1,0 +1,151 @@
+"""Analytic TPU v5e cost model — the ProfilingAgent's "hardware".
+
+The paper's profiling agent measures kernels on an H100 (20 warm-ups, 100
+reps). This container has no TPU, so the profiling agent instead evaluates
+an analytic roofline model of TPU v5e derived from the kernel's variant
+parameters and input shapes. The model is deliberately mechanistic — it
+charges for the same things Nsight Compute surfaces (DRAM traffic,
+transcendental throughput, launch/step overhead, occupancy/alignment
+waste) so the PlanningAgent can reason from the same kind of signals the
+paper's planning agent reads out of a profile.
+
+Hardware constants (TPU v5e, per chip — same numbers as the §Roofline
+analysis so kernel-level and system-level reasoning agree):
+
+  * 197 TFLOP/s bf16 on the MXU (fp32 ≈ 1/4 of that through the MXU).
+  * ~7 TOP/s fp32 element-wise on the VPU (8×128 lanes, ~1.7 GHz, FMA=2);
+    transcendentals cost multiple VPU ops (polynomial expansions).
+  * 819 GB/s HBM bandwidth; DMA transactions are 512-byte granular.
+  * ~128 MiB VMEM; a pipelined Pallas grid needs 2× (double buffering).
+  * Grid-step issue overhead ~150 ns (DMA descriptor + semaphore wait,
+    amortized by Mosaic's automatic pipelining); kernel launch ~2 µs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# --- TPU v5e constants ------------------------------------------------------
+PEAK_MXU_BF16 = 197e12          # FLOP/s
+PEAK_MXU_FP32 = PEAK_MXU_BF16 / 4
+PEAK_VPU_FP32 = 7e12            # element-ops/s (fp32 ALU, FMA counted as 2)
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (used by §Roofline)
+VMEM_BYTES = 128 * 2**20
+VMEM_PIPELINE_FACTOR = 2        # double buffering
+DMA_GRANULE = 512               # bytes; narrower reads are padded
+STEP_OVERHEAD_S = 60e-9         # per grid step (scalar-core dispatch)
+LAUNCH_OVERHEAD_S = 2e-6        # per pallas_call
+
+# VPU op weights (fp32-equivalent element ops). Transcendentals lower to
+# polynomial sequences on the VPU; divides iterate Newton steps.
+OP = {
+    "add": 1.0, "mul": 1.0, "fma": 1.0, "max": 1.0, "cmp": 1.0,
+    "cast": 1.0,
+    "exp": 12.0,      # range-reduce + poly (the __expf analogue costs ~3)
+    "exp_fast": 3.0,
+    "div": 8.0,       # Newton-Raphson refine
+    "rcp": 3.0,       # the __frcp_rn analogue
+    "sqrt": 8.0,
+    "rsqrt": 3.0,
+    "log": 12.0,
+}
+
+
+class Infeasible(Exception):
+    """Variant cannot run (e.g. VMEM working set exceeds the budget)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Cost:
+    """Analytic cost of one kernel invocation on one input shape."""
+    hbm_bytes: float            # total HBM traffic (reads + writes), incl.
+                                # DMA-granule padding waste
+    vpu_ops: float              # weighted fp32-equivalent element ops
+    mxu_flops: float = 0.0
+    mxu_dtype: str = "bf16"
+    grid_steps: int = 1
+    n_calls: int = 1            # pallas_call launches (multi-pass variants)
+    vmem_bytes: int = 0         # per-step working set (pre-pipelining)
+    align_waste_bytes: float = 0.0  # traffic wasted on padding/misalignment
+
+    def validate(self) -> None:
+        if self.vmem_bytes * VMEM_PIPELINE_FACTOR > VMEM_BYTES:
+            raise Infeasible(
+                f"VMEM working set {self.vmem_bytes/2**20:.1f} MiB x"
+                f"{VMEM_PIPELINE_FACTOR} exceeds {VMEM_BYTES/2**20:.0f} MiB")
+
+    # --- roofline terms ---
+    @property
+    def mem_s(self) -> float:
+        return (self.hbm_bytes + self.align_waste_bytes) / HBM_BW
+
+    @property
+    def compute_s(self) -> float:
+        mxu_peak = PEAK_MXU_BF16 if self.mxu_dtype == "bf16" else PEAK_MXU_FP32
+        return self.vpu_ops / PEAK_VPU_FP32 + self.mxu_flops / mxu_peak
+
+    @property
+    def prologue_s(self) -> float:
+        # First tile's DMA fill is not overlapped with compute (pipeline
+        # ramp-up); over-sized blocks pay for it — tile sizing is a
+        # trade-off, not monotone.
+        return self.n_calls * self.vmem_bytes / HBM_BW
+
+    @property
+    def overhead_s(self) -> float:
+        return (self.grid_steps * STEP_OVERHEAD_S
+                + self.n_calls * LAUNCH_OVERHEAD_S + self.prologue_s)
+
+    @property
+    def latency_s(self) -> float:
+        # Mosaic pipelines DMA against compute; the winner of the roofline
+        # max sets the steady-state rate, plus ramp-up + launch + step issue.
+        return (max(self.mem_s, self.compute_s,
+                    self.grid_steps * STEP_OVERHEAD_S)
+                + self.prologue_s + self.n_calls * LAUNCH_OVERHEAD_S)
+
+    def dominant(self) -> str:
+        terms = {"memory": self.mem_s, "compute": self.compute_s,
+                 "overhead": self.overhead_s}
+        return max(terms, key=terms.get)
+
+    def summary(self) -> dict:
+        return {
+            "latency_us": self.latency_s * 1e6,
+            "mem_us": self.mem_s * 1e6,
+            "compute_us": self.compute_s * 1e6,
+            "overhead_us": self.overhead_s * 1e6,
+            "dominant": self.dominant(),
+            "hbm_mb": self.hbm_bytes / 2**20,
+            "align_waste_frac": self.align_waste_bytes
+            / max(self.hbm_bytes, 1.0),
+            "vmem_kb": self.vmem_bytes / 1024,
+            "grid_steps": self.grid_steps,
+        }
+
+
+def combine(costs: list[Cost]) -> Cost:
+    """Sum the costs of a multi-pass variant (one Cost per pallas_call)."""
+    return Cost(
+        hbm_bytes=sum(c.hbm_bytes for c in costs),
+        vpu_ops=sum(c.vpu_ops for c in costs),
+        mxu_flops=sum(c.mxu_flops for c in costs),
+        mxu_dtype=costs[0].mxu_dtype,
+        grid_steps=sum(c.grid_steps for c in costs),
+        n_calls=sum(c.n_calls for c in costs),
+        vmem_bytes=max(c.vmem_bytes for c in costs),
+        align_waste_bytes=sum(c.align_waste_bytes for c in costs),
+    )
+
+
+def dma_bytes(logical_bytes: float, row_bytes: float) -> tuple[float, float]:
+    """(charged_bytes, waste) for a transfer whose rows are `row_bytes` wide.
+
+    DMAs move at least ``DMA_GRANULE`` bytes per row; narrow rows (e.g. the
+    ``[rows, 1]`` score columns of Kernel 1) pay padding.
+    """
+    if row_bytes >= DMA_GRANULE:
+        return logical_bytes, 0.0
+    factor = DMA_GRANULE / max(row_bytes, 1.0)
+    return logical_bytes, logical_bytes * (factor - 1.0)

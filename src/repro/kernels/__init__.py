@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+Each kernel module ships a ``*Variant`` dataclass (the genome the Astra
+loop tunes), ``BASELINE`` / ``OPTIMIZED`` instances, the ``pl.pallas_call``
+implementation, and a ``reference`` alias to the pure-jnp oracle in
+``ref.py``. ``ops.py`` is the jit'd public wrapper the models call.
+"""
+
+from repro.kernels import flash_decode  # noqa: F401
+from repro.kernels import fused_add_rmsnorm  # noqa: F401
+from repro.kernels import merge_attn_states  # noqa: F401
+from repro.kernels import ops  # noqa: F401
+from repro.kernels import ref  # noqa: F401
+from repro.kernels import silu_and_mul  # noqa: F401

@@ -1,0 +1,242 @@
+"""Split-KV (FlashDecoding-style) GQA decode attention — Pallas TPU kernel.
+
+This is the production consumer of paper Kernel 1: the KV cache is split
+into sequence chunks; each chunk produces a partial attention state
+``(V_partial, LSE)``; partials are merged with the ``merge_attn_states_lse``
+math (running online-softmax merge in VMEM scratch across grid steps).
+
+The same merge runs at TWO levels:
+  1. on-chip: across KV chunks inside this kernel (this file), and
+  2. cross-device: sequence-parallel decode shards the KV cache along the
+     sequence axis; per-shard partials from this kernel are merged with
+     collectives in ``repro/serving/decode.py`` — the distributed form of
+     Kernel 1.
+
+Grid: ``(batch * kv_heads, num_chunks)`` with the chunk axis sequential
+("arbitrary"), carrying ``(acc, m, l)`` in VMEM scratch — the classic
+online-softmax carry. Block shapes: q ``[group_pad, head_dim]``, k/v
+``[chunk, head_dim]``.
+
+Variant knobs (the space Astra searches):
+  * ``chunk``        — KV rows per grid step (VMEM working set).
+  * ``use_reciprocal`` — final normalize via rcp+mul vs divide.
+  * ``mask_oob``     — predicate chunks entirely past ``kv_len`` (skip work)
+    vs masking every score (baseline reads + masks everything).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+from repro.kernels._common import round_up
+
+NEG_INF = -1e30  # finite -inf stand-in: keeps exp() well-defined on padding
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashDecodeVariant:
+    name: str = "baseline"
+    chunk: int = 512
+    use_reciprocal: bool = False
+    mask_oob: bool = False
+
+    def describe(self) -> str:
+        return (f"{self.name}: chunk={self.chunk} rcp={self.use_reciprocal} "
+                f"mask_oob={self.mask_oob}")
+
+
+BASELINE = FlashDecodeVariant()
+OPTIMIZED = FlashDecodeVariant(name="astra_opt", chunk=1024,
+                               use_reciprocal=True, mask_oob=True)
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *,
+            chunk, sm_scale, use_reciprocal, mask_oob):
+    j = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+    kv_len = len_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _step():
+        q = q_ref[0].astype(jnp.float32)              # [G, D]
+        k = k_ref[0].astype(jnp.float32)              # [C, D]
+        v = v_ref[0].astype(jnp.float32)              # [C, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale   # [G, C]
+        # mask positions >= kv_len within this chunk
+        pos = j * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+
+        m_prev = m_ref[...][:, :1]                    # [G, 1]
+        l_prev = l_ref[...][:, :1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)    # [G, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        # merge_attn_states_lse math: rescale old accumulator, add new chunk
+        alpha = jnp.exp(m_prev - m_new)               # e^{S_a - m}
+        p = jnp.exp(s - m_new)                        # [G, C]
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    if mask_oob:
+        # Optimized: skip chunks entirely past kv_len (saves the matmul+exp).
+        pl.when(j * chunk < kv_len)(_step)
+    else:
+        _step()
+
+    @pl.when(j == n_chunks - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        if use_reciprocal:
+            inv = jnp.where(l > 0, pl.reciprocal(l, approx=False), 0.0)
+            o_ref[0] = (acc_ref[...] * inv).astype(o_ref.dtype)
+        else:
+            safe_l = jnp.where(l > 0, l, 1.0)
+            o_ref[0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           kv_len: jax.Array | None = None,
+                           sm_scale: float | None = None,
+                           variant: FlashDecodeVariant = OPTIMIZED,
+                           interpret: bool = False,
+                           return_lse: bool = False):
+    """Single-token GQA decode attention over a (chunked) KV cache.
+
+    Args:
+      q: ``[batch, q_heads, head_dim]``.
+      k, v: ``[batch, seq, kv_heads, head_dim]``.
+      kv_len: ``[batch]`` int32 valid lengths (default: full cache).
+
+    Returns:
+      ``[batch, q_heads, head_dim]`` (and ``[batch, q_heads]`` LSE when
+      ``return_lse`` — the partial state consumed by the distributed merge).
+    """
+    b, hq, dh = q.shape
+    _, s, hkv, _ = k.shape
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (dh ** 0.5)
+    if kv_len is None:
+        kv_len = jnp.full((b,), s, jnp.int32)
+
+    chunk = min(variant.chunk, s)
+    s_pad = round_up(s, chunk)
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    n_chunks = s_pad // chunk
+
+    g_pad = round_up(group, 8)  # sublane-align the query group
+    # [b, hkv, G, D] with padded group rows
+    q4 = q.reshape(b, hkv, group, dh)
+    if g_pad != group:
+        q4 = jnp.pad(q4, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+    q3 = q4.reshape(b * hkv, g_pad, dh)
+    # [b*hkv, s_pad, dh]
+    k3 = jnp.swapaxes(k, 1, 2).reshape(b * hkv, s_pad, dh)
+    v3 = jnp.swapaxes(v, 1, 2).reshape(b * hkv, s_pad, dh)
+    len2 = jnp.repeat(kv_len.astype(jnp.int32), hkv).reshape(b * hkv, 1)
+
+    grid = (b * hkv, n_chunks)
+    kern = functools.partial(
+        _kernel, chunk=chunk, sm_scale=sm_scale,
+        use_reciprocal=variant.use_reciprocal, mask_oob=variant.mask_oob)
+
+    out = pl.pallas_call(
+        kern, grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g_pad, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g_pad, dh), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, dh), jnp.float32),
+            pltpu.VMEM((g_pad, 128), jnp.float32),
+            pltpu.VMEM((g_pad, 128), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(len2, q3, k3, v3)
+
+    out = out.reshape(b, hkv, g_pad, dh)[:, :, :group].reshape(b, hq, dh)
+    if not return_lse:
+        return out
+    # LSE is recomputed cheaply host-side for the distributed merge path.
+    lse = ref.flash_decode_lse(q, k[:, :s], kv_len=kv_len, sm_scale=sm_scale)
+    return out, lse
+
+
+def cost(variant: FlashDecodeVariant, *, batch: int, q_heads: int,
+         kv_heads: int, head_dim: int, seq: int, dtype,
+         mean_kv_len: float | None = None):
+    """Analytic v5e cost of decode attention over a ``[b, s, hkv, d]`` cache."""
+    from repro.core import costmodel as cm
+
+    import jax.numpy as jnp
+    item = jnp.dtype(dtype).itemsize
+    group = q_heads // kv_heads
+    g_pad = round_up(group, 8)
+    chunk = min(variant.chunk, seq)
+    s_pad = round_up(seq, chunk)
+    n_chunks = s_pad // chunk
+    ops = cm.OP
+
+    # fraction of chunks actually touched when predication is on
+    frac = 1.0
+    if variant.mask_oob and mean_kv_len is not None:
+        frac = min(1.0, (mean_kv_len / chunk + 1) / n_chunks)
+
+    kv_bytes = 2 * batch * kv_heads * s_pad * head_dim * item * frac
+    q_bytes = batch * q_heads * head_dim * item
+    o_bytes = batch * kv_heads * g_pad * head_dim * item
+
+    mxu = 2 * 2 * batch * kv_heads * g_pad * head_dim * s_pad * frac  # qk + pv
+    # per-score VPU: mask cmp+sel, exp, running max/sum, rescale
+    vpu = batch * kv_heads * g_pad * s_pad * frac * (
+        ops["exp"] + 2 * ops["cmp"] + ops["max"] + 2 * ops["fma"])
+    vpu += batch * kv_heads * g_pad * head_dim * n_chunks * frac * 2 * ops["fma"]
+    vpu += batch * kv_heads * g_pad * head_dim * (
+        (ops["rcp"] + ops["mul"]) if variant.use_reciprocal else ops["div"])
+
+    c = cm.Cost(
+        hbm_bytes=kv_bytes + q_bytes + o_bytes,
+        vpu_ops=vpu,
+        mxu_flops=mxu,
+        mxu_dtype="bf16" if item == 2 else "fp32",
+        grid_steps=batch * kv_heads * n_chunks,
+        n_calls=1,
+        vmem_bytes=(2 * chunk * head_dim * item          # k, v blocks
+                    + 2 * g_pad * head_dim * 4           # q, acc
+                    + 2 * g_pad * 128 * 4),              # m, l
+        align_waste_bytes=kv_bytes * (s_pad / seq - 1.0)
+        + (g_pad - group) / max(group, 1) * q_bytes,
+    )
+    c.validate()
+    return c
+
+
+reference = ref.flash_decode_attention

@@ -1,0 +1,207 @@
+"""Paper Kernel 2 — ``fused_add_rmsnorm`` as a Pallas TPU kernel.
+
+The CUDA optimization story (paper §5.3, Fig. 3) is a reduction-strategy
+change: shared-memory tree reduction → register-resident warp-shuffle
+reduction with a short shared-memory finalize. TPUs have no warps or shared
+memory; the idiomatic equivalent (DESIGN.md §2) is the *reduction layout*:
+
+  * ``two_pass``   — baseline: pass 1 reduces each row block to a partial
+    sum-of-squares written back to HBM scratch; pass 2 re-reads the rows and
+    normalizes. Mirrors the extra round-trips of the tree reduction.
+  * one-pass (``two_pass=False``) — the whole row lives in VMEM; the
+    sum-of-squares is a single lane-axis ``jnp.sum`` that Mosaic lowers to
+    the VPU reduction tree (the register-resident shuffle analogue), and the
+    normalize happens in the same kernel instance — one HBM round trip.
+  * ``use_rsqrt``  — ``rsqrt`` intrinsic vs ``1/sqrt`` (div + sqrt), the
+    fast-math analogue.
+  * ``accum_fp32`` — fp32 accumulation of the squares (safe default).
+  * ``block_rows`` — rows per grid step (VMEM tile height).
+
+Contract (SGLang): ``r' = x + r``; ``y = r' * rsqrt(mean(r'^2) + eps) * w``;
+returns ``(y, r')``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+from repro.kernels._common import cdiv, pad_rows, round_up, sublane_for
+
+
+@dataclasses.dataclass(frozen=True)
+class RmsNormVariant:
+    name: str = "baseline"
+    block_rows: int = 16
+    two_pass: bool = True
+    use_rsqrt: bool = False
+    accum_fp32: bool = True
+
+    def describe(self) -> str:
+        return (f"{self.name}: rows={self.block_rows} two_pass={self.two_pass} "
+                f"rsqrt={self.use_rsqrt} fp32={self.accum_fp32}")
+
+
+# Literal-port baseline: one row-block per grid step + the two-pass
+# reduction structure of the CUDA shared-memory tree (extra HBM round trip).
+BASELINE = RmsNormVariant()
+OPTIMIZED = RmsNormVariant(
+    name="astra_opt", block_rows=16, two_pass=False, use_rsqrt=True)
+
+
+def _norm_from_rows(r, w, eps, *, use_rsqrt, accum_fp32, out_dtype):
+    rf = r.astype(jnp.float32) if accum_fp32 else r
+    var = jnp.mean(jnp.square(rf), axis=-1, keepdims=True)
+    if use_rsqrt:
+        scale = jax.lax.rsqrt(var + eps)
+    else:
+        scale = 1.0 / jnp.sqrt(var + eps)
+    y = rf * scale * w.astype(rf.dtype)
+    return y.astype(out_dtype)
+
+
+def _one_pass_kernel(x_ref, res_ref, w_ref, y_ref, res_out_ref, *,
+                     eps, use_rsqrt, accum_fp32):
+    x = x_ref[...]
+    res = res_ref[...]
+    r = (x.astype(jnp.float32) + res.astype(jnp.float32)) if accum_fp32 \
+        else (x + res)
+    res_out_ref[...] = r.astype(res_out_ref.dtype)
+    y_ref[...] = _norm_from_rows(r, w_ref[...], eps, use_rsqrt=use_rsqrt,
+                                 accum_fp32=accum_fp32, out_dtype=y_ref.dtype)
+
+
+def _pass1_kernel(x_ref, res_ref, sumsq_ref, res_out_ref, *, accum_fp32):
+    x = x_ref[...]
+    res = res_ref[...]
+    r = (x.astype(jnp.float32) + res.astype(jnp.float32)) if accum_fp32 \
+        else (x + res)
+    res_out_ref[...] = r.astype(res_out_ref.dtype)
+    ss = jnp.sum(jnp.square(r.astype(jnp.float32)), axis=-1, keepdims=True)
+    sumsq_ref[...] = jnp.broadcast_to(ss, sumsq_ref.shape)
+
+
+def _pass2_kernel(r_ref, sumsq_ref, w_ref, y_ref, *, eps, d, use_rsqrt):
+    r = r_ref[...].astype(jnp.float32)
+    var = sumsq_ref[...][:, :1] / d
+    if use_rsqrt:
+        scale = jax.lax.rsqrt(var + eps)
+    else:
+        scale = 1.0 / jnp.sqrt(var + eps)
+    y = r * scale * w_ref[...].astype(jnp.float32)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def fused_add_rmsnorm(x: jax.Array, residual: jax.Array, weight: jax.Array,
+                      eps: float = 1e-6,
+                      variant: RmsNormVariant = OPTIMIZED, *,
+                      interpret: bool = False):
+    """Fused residual-add + RMSNorm. Returns ``(y, new_residual)``."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    x2 = x.reshape(-1, d)
+    r2 = residual.reshape(-1, d)
+    n = x2.shape[0]
+
+    sl = sublane_for(x.dtype)
+    br = max(sl, (min(variant.block_rows, max(n, 1)) // sl) * sl) if n >= sl else max(n, 1)
+    x2, n_pad = pad_rows(x2, br)
+    r2, _ = pad_rows(r2, br)
+    grid = (n_pad // br,)
+    w2 = weight.reshape(1, d)
+
+    row_spec = pl.BlockSpec((br, d), lambda i: (i, 0))
+    w_spec = pl.BlockSpec((1, d), lambda i: (0, 0))
+
+    if not variant.two_pass:
+        kern = functools.partial(_one_pass_kernel, eps=eps,
+                                 use_rsqrt=variant.use_rsqrt,
+                                 accum_fp32=variant.accum_fp32)
+        y, res_out = pl.pallas_call(
+            kern, grid=grid,
+            in_specs=[row_spec, row_spec, w_spec],
+            out_specs=[row_spec, row_spec],
+            out_shape=[jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+                       jax.ShapeDtypeStruct((n_pad, d), x.dtype)],
+            interpret=interpret,
+        )(x2, r2, w2)
+    else:
+        # Baseline: two HBM round trips (reduce, then normalize).
+        sum_spec = pl.BlockSpec((br, 128), lambda i: (i, 0))
+        kern1 = functools.partial(_pass1_kernel, accum_fp32=variant.accum_fp32)
+        sumsq, res_out = pl.pallas_call(
+            kern1, grid=grid,
+            in_specs=[row_spec, row_spec],
+            out_specs=[sum_spec, row_spec],
+            out_shape=[jax.ShapeDtypeStruct((n_pad, 128), jnp.float32),
+                       jax.ShapeDtypeStruct((n_pad, d), x.dtype)],
+            interpret=interpret,
+        )(x2, r2)
+        kern2 = functools.partial(_pass2_kernel, eps=eps, d=float(d),
+                                  use_rsqrt=variant.use_rsqrt)
+        y = pl.pallas_call(
+            kern2, grid=grid,
+            in_specs=[row_spec, sum_spec, w_spec],
+            out_specs=row_spec,
+            out_shape=jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+            interpret=interpret,
+        )(res_out, sumsq, w2)
+
+    y = y[:n].reshape(orig_shape)
+    res_out = res_out[:n].reshape(orig_shape)
+    return y, res_out
+
+
+def cost(variant: RmsNormVariant, *, rows: int, d: int, dtype):
+    """Analytic v5e cost of this variant on ``[rows, d]`` inputs."""
+    from repro.core import costmodel as cm
+
+    item = jnp.dtype(dtype).itemsize
+    sl = sublane_for(dtype)
+    br = max(sl, (min(variant.block_rows, max(rows, 1)) // sl) * sl) \
+        if rows >= sl else max(rows, 1)
+    n_pad = round_up(rows, br)
+    steps = n_pad // br
+    ops = cm.OP
+
+    # shared per-element work: add residual, square+accumulate, scale*w
+    el_add = ops["add"] + (2 * ops["cast"] if variant.accum_fp32 and item < 4 else 0)
+    el_sq = ops["fma"]
+    el_scale = 2 * ops["mul"] + (ops["cast"] if item < 4 else 0)
+    per_row_scalar = (ops["rsqrt"] if variant.use_rsqrt
+                      else ops["sqrt"] + ops["div"]) + ops["add"]
+    pad_waste = (n_pad - rows) * d * item * 4
+
+    if not variant.two_pass:
+        c = cm.Cost(
+            hbm_bytes=(2 * rows * d + d) * item + 2 * rows * d * item,
+            vpu_ops=rows * d * (el_add + el_sq + el_scale) + rows * per_row_scalar,
+            grid_steps=steps, n_calls=1,
+            vmem_bytes=br * d * 4 * 4,  # x, res, y, res_out blocks (fp32 compute)
+            align_waste_bytes=pad_waste)
+        c.validate()
+        return c
+
+    # two-pass: pass 1 reads x+res, writes res'+sumsq; pass 2 re-reads res',
+    # reads sumsq, writes y — the CUDA tree-reduction's extra traffic analogue.
+    p1 = cm.Cost(
+        hbm_bytes=(2 * rows * d + rows * 128) * item + rows * d * item,
+        vpu_ops=rows * d * (el_add + el_sq),
+        grid_steps=steps, n_calls=1, vmem_bytes=br * d * 3 * 4,
+        align_waste_bytes=pad_waste / 2 + rows * 127 * 4)  # sumsq lane pad
+    p2 = cm.Cost(
+        hbm_bytes=(rows * d + rows * 128 + d) * item + rows * d * item,
+        vpu_ops=rows * d * el_scale + rows * per_row_scalar,
+        grid_steps=steps, n_calls=1, vmem_bytes=br * d * 2 * 4,
+        align_waste_bytes=pad_waste / 2)
+    total = cm.combine([p1, p2])
+    total.validate()
+    return total
+
+
+reference = ref.fused_add_rmsnorm

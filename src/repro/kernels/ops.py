@@ -1,0 +1,110 @@
+"""Public jit'd wrappers for the kernel package — the "reintegration" layer.
+
+The paper's post-processing step drops optimized kernels back into SGLang as
+transparent replacements. Here the model layers (``repro.models``) call
+*these* functions, never a Pallas kernel directly, so an Astra-tuned variant
+is a drop-in replacement for the whole framework.
+
+Dispatch policy (``impl``):
+  * ``"auto"``   — Pallas on TPU backends; pure-jnp reference elsewhere
+    (CPU dry-run / tests / training backward pass all lower the reference).
+  * ``"pallas"`` — force the Pallas kernel (``interpret=True`` off-TPU).
+  * ``"ref"``    — force the pure-jnp oracle.
+
+Training uses the reference formulations (differentiable jnp); serving's
+hot decode path uses the Pallas kernels on TPU. ``set_variants`` installs
+Astra-tuned variants process-wide (what the paper calls reintegration).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_decode as _fd
+from repro.kernels import fused_add_rmsnorm as _rms
+from repro.kernels import merge_attn_states as _merge
+from repro.kernels import ref
+from repro.kernels import silu_and_mul as _silu
+
+Impl = Literal["auto", "pallas", "ref"]
+
+# Process-wide tuned variants (Astra writes these via ``set_variants``).
+_VARIANTS = {
+    "silu_and_mul": _silu.OPTIMIZED,
+    "fused_add_rmsnorm": _rms.OPTIMIZED,
+    "merge_attn_states_lse": _merge.OPTIMIZED,
+    "flash_decode": _fd.OPTIMIZED,
+}
+
+
+def set_variants(**kwargs) -> None:
+    """Reintegrate tuned kernel variants (paper §3.2 post-processing)."""
+    for name, variant in kwargs.items():
+        if name not in _VARIANTS:
+            raise KeyError(f"unknown kernel {name!r}; have {list(_VARIANTS)}")
+        _VARIANTS[name] = variant
+
+
+def get_variant(name: str):
+    return _VARIANTS[name]
+
+
+def _use_pallas(impl: Impl) -> tuple[bool, bool]:
+    """Returns (use_pallas, interpret)."""
+    if impl == "ref":
+        return False, False
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "pallas":
+        return True, not on_tpu
+    return on_tpu, False  # auto
+
+
+def silu_and_mul(x: jax.Array, *, impl: Impl = "auto") -> jax.Array:
+    """SwiGLU gate: ``silu(x[..., :d]) * x[..., d:]``."""
+    use, interp = _use_pallas(impl)
+    if use:
+        return _silu.silu_and_mul(x, _VARIANTS["silu_and_mul"],
+                                  interpret=interp)
+    return ref.silu_and_mul(x)
+
+
+def fused_add_rmsnorm(x: jax.Array, residual: jax.Array, weight: jax.Array,
+                      eps: float = 1e-6, *, impl: Impl = "auto"):
+    """Residual-add + RMSNorm. Returns ``(y, new_residual)``."""
+    use, interp = _use_pallas(impl)
+    if use:
+        return _rms.fused_add_rmsnorm(x, residual, weight, eps,
+                                      _VARIANTS["fused_add_rmsnorm"],
+                                      interpret=interp)
+    return ref.fused_add_rmsnorm(x, residual, weight, eps)
+
+
+def merge_attn_states_lse(v_a, s_a, v_b, s_b, *, impl: Impl = "auto"):
+    """LSE-merge of two partial attention states. Returns ``(v, s)``."""
+    use, interp = _use_pallas(impl)
+    if use:
+        return _merge.merge_attn_states_lse(
+            v_a, s_a, v_b, s_b, _VARIANTS["merge_attn_states_lse"],
+            interpret=interp)
+    return ref.merge_attn_states_lse(v_a, s_a, v_b, s_b)
+
+
+def flash_decode_attention(q, k, v, *, kv_len=None, sm_scale=None,
+                           return_lse: bool = False, impl: Impl = "auto"):
+    """Single-token GQA decode attention over the KV cache."""
+    use, interp = _use_pallas(impl)
+    if use:
+        return _fd.flash_decode_attention(
+            q, k, v, kv_len=kv_len, sm_scale=sm_scale,
+            variant=_VARIANTS["flash_decode"], interpret=interp,
+            return_lse=return_lse)
+    out = ref.flash_decode_attention(q, k, v, kv_len=kv_len,
+                                     sm_scale=sm_scale)
+    if not return_lse:
+        return out
+    lse = ref.flash_decode_lse(q, k, kv_len=kv_len, sm_scale=sm_scale)
+    return out, lse

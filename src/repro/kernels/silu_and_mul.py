@@ -1,0 +1,196 @@
+"""Paper Kernel 3 — ``silu_and_mul`` (SwiGLU gate) as a Pallas TPU kernel.
+
+The CUDA baseline does scalar ``__half`` loads and library-math SiLU with a
+division; the Astra-optimized CUDA version uses ``half2`` vectorized loads
+and ``__expf``/``__frcp_rn`` fast math (paper §5.3, Figs. 4–5). The TPU
+adaptation of that optimization space (DESIGN.md §2):
+
+  * ``fused_split``   — baseline materializes ``gate``/``up`` slices in HBM
+    (the extra-memory-transaction analogue of scalar loads); the optimized
+    variant indexes both halves of the *original* array via two BlockSpecs
+    over the same buffer, so no slice copies are ever written to HBM.
+  * ``use_reciprocal`` — division-free SiLU: ``z * rcp(1 + e^{-z})``
+    (reciprocal-multiply, the ``__frcp_rn`` analogue; the cost model charges
+    div at a lower rate than rcp+mul on the VPU).
+  * ``compute_fp32``  — accumulate in fp32 (safe) vs bf16 fast-math.
+  * ``block_rows`` / ``block_cols`` — VMEM tile geometry; lane-aligned
+    (multiples of (8/16, 128)) tiles are the ``half2`` analogue: full-width
+    VREG transfers with zero padding waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+from repro.kernels._common import LANE, cdiv, pad_rows, round_up, sublane_for
+
+
+@dataclasses.dataclass(frozen=True)
+class SiluMulVariant:
+    """Genome for the silu_and_mul kernel (the space Astra searches)."""
+    name: str = "baseline"
+    block_rows: int = 16
+    block_cols: int = 256
+    compute_fp32: bool = True
+    use_reciprocal: bool = False
+    fast_exp: bool = False
+    fused_split: bool = False
+
+    def describe(self) -> str:
+        return (f"{self.name}: tile=({self.block_rows},{self.block_cols}) "
+                f"fp32={self.compute_fp32} rcp={self.use_reciprocal} "
+                f"exp2={self.fast_exp} fused_split={self.fused_split}")
+
+
+# "Production port" baseline: a reasonable but untuned direct translation of
+# the SGLang kernel structure (modest tile, library math, materialized
+# gate/up slices — the scalar-load analogue).
+BASELINE = SiluMulVariant()
+# Found by the Astra loop (see EXPERIMENTS.md §Perf / benchmarks table 2).
+OPTIMIZED = SiluMulVariant(
+    name="astra_opt", block_rows=32, block_cols=256,
+    compute_fp32=True, use_reciprocal=False, fast_exp=False, fused_split=True,
+)
+
+_LOG2E = 1.4426950408889634
+
+
+def _pick_block_cols(d: int, want: int) -> int:
+    """Largest divisor of d that is <= want, preferring lane multiples.
+
+    The fused-split path offsets the `up` BlockSpec by whole blocks, so the
+    block width must divide d exactly.
+    """
+    want = max(1, min(want, d))
+    lane_divs = [bc for bc in range(LANE, want + 1, LANE) if d % bc == 0]
+    if lane_divs:
+        return lane_divs[-1]
+    return d  # no aligned divisor: use the whole row as one block
+
+
+def _kernel(gate_ref, up_ref, o_ref, *, compute_fp32: bool,
+            use_reciprocal: bool, fast_exp: bool):
+    gate = gate_ref[...]
+    up = up_ref[...]
+    if compute_fp32:
+        gate = gate.astype(jnp.float32)
+        up = up.astype(jnp.float32)
+    if fast_exp:
+        # exp(-z) = exp2(-z * log2(e)): exp2 is the native VPU transcendental
+        # (no base-e range reduction) — the __expf analogue.
+        e = jnp.exp2(-gate * _LOG2E)
+    else:
+        e = jnp.exp(-gate)
+    if use_reciprocal:
+        # Fast-math: z * rcp(1 + exp(-z)) — reciprocal-multiply, no divide.
+        sig = 1.0 / (1.0 + e)  # lowered to rcp on the VPU
+        out = gate * sig * up
+    else:
+        # Library-math formulation with an explicit divide (paper baseline).
+        out = (gate / (1.0 + e)) * up
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def silu_and_mul(x: jax.Array, variant: SiluMulVariant = OPTIMIZED, *,
+                 interpret: bool = False) -> jax.Array:
+    """``silu(x[..., :d]) * x[..., d:]`` — Pallas TPU implementation.
+
+    Accepts any leading batch shape; the kernel runs on the flattened
+    ``[rows, 2d]`` view.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1] // 2
+    x2 = x.reshape(-1, orig_shape[-1])
+    n = x2.shape[0]
+
+    bc = _pick_block_cols(d, variant.block_cols)
+    sl = sublane_for(x.dtype)
+    br = max(sl, (min(variant.block_rows, n) // sl) * sl) if n >= sl else n
+    x2, n_pad = pad_rows(x2, br)
+
+    grid = (n_pad // br, cdiv(d, bc))
+    kern = functools.partial(
+        _kernel, compute_fp32=variant.compute_fp32,
+        use_reciprocal=variant.use_reciprocal, fast_exp=variant.fast_exp)
+
+    if variant.fused_split:
+        # Two BlockSpecs over the SAME buffer: gate blocks from columns
+        # [0, d), up blocks from columns [d, 2d). No slice copies in HBM.
+        n_cb = cdiv(d, bc)
+        in_specs = [
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j, n_cb=n_cb: (i, j + n_cb)),
+        ]
+        operands = (x2, x2)
+    else:
+        # Baseline: materialized gate/up slices (extra HBM round-trip).
+        in_specs = [
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ]
+        operands = (x2[:, :d], x2[:, d:])
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:n].reshape(*orig_shape[:-1], d)
+
+
+def cost(variant: SiluMulVariant, *, rows: int, d: int, dtype):
+    """Analytic v5e cost of this variant on a ``[rows, 2d]`` input."""
+    from repro.core import costmodel as cm
+
+    item = jnp.dtype(dtype).itemsize
+    sl = sublane_for(dtype)
+    bc = _pick_block_cols(d, variant.block_cols)
+    br = max(sl, (min(variant.block_rows, rows) // sl) * sl) if rows >= sl \
+        else max(rows, 1)
+    n_pad = round_up(rows, br)
+    grid_steps = (n_pad // br) * cdiv(d, bc)
+
+    # per-element VPU work (fp32-equivalent weighted ops)
+    ops = cm.OP
+    per_el = ops["mul"]  # final multiply by `up`
+    per_el += (ops["exp_fast"] + ops["mul"]) if variant.fast_exp else ops["exp"]
+    per_el += ops["add"]  # 1 + e
+    per_el += (ops["rcp"] + ops["mul"]) if variant.use_reciprocal else ops["div"]
+    if variant.compute_fp32 and item < 4:
+        per_el += 3 * ops["cast"]
+
+    pad_rows_waste = (n_pad - rows) * d * item * 3  # read 2 + write 1
+    lane_waste = 0.0
+    if bc % LANE:
+        lane_waste = rows * d * item * 3 * (round_up(bc, LANE) / bc - 1.0)
+
+    main = cm.Cost(
+        hbm_bytes=3 * rows * d * item,
+        vpu_ops=rows * d * per_el,
+        grid_steps=grid_steps,
+        n_calls=1,
+        vmem_bytes=br * bc * (2 + 1) * (4 if variant.compute_fp32 else item),
+        align_waste_bytes=pad_rows_waste + lane_waste,
+    )
+    costs = [main]
+    if not variant.fused_split:
+        # Materialized gate/up slices: one extra HBM round trip of x.
+        costs.append(cm.Cost(
+            hbm_bytes=4 * rows * d * item,  # read x, write both halves
+            vpu_ops=0.0, grid_steps=max(1, grid_steps // 1), n_calls=1,
+            vmem_bytes=br * bc * 2 * item))
+    total = cm.combine(costs)
+    total.validate()
+    return total
+
+
+reference = ref.silu_and_mul

@@ -1,0 +1,23 @@
+"""Mesh construction. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Production TPU v5e mesh: 16x16 (one pod, 256 chips) or
+    2x16x16 (two pods, 512 chips). The ``pod`` axis is the DCN hop —
+    gradient reduction composes (pod, data); see sharding/rules.py."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Whatever this host has (CPU smoke tests: 1 device)."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

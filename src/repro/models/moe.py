@@ -1,0 +1,228 @@
+"""Mixture-of-Experts transformer (granite-moe-3b-a800m, olmoe-1b-7b).
+
+Expert-parallel (EP) design: GShard/Mesh-TF grouped capacity dispatch —
+tokens are split into groups; within each group a top-k router builds a
+dispatch one-hot [G, E, C]; dispatch/combine einsums against the token
+block lower to all-to-all under GSPMD when the group axis is data-sharded
+and the expert axis is model-sharded. Dispatch FLOPs overhead is visible
+in the §Roofline useful-FLOPs ratio (group size is a hillclimb knob).
+
+Expert FFNs are SwiGLU — paper Kernel 3 runs inside every expert.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.kernels import ops
+
+
+GROUP = 256  # tokens per dispatch group
+
+
+def capacity(cfg: ModelConfig, group: int) -> int:
+    c = int(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(cfg.top_k, -(-c // 8) * 8)  # sublane-align, >= top_k
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key):
+    keys = jax.random.split(key, 4)
+    dtype = jnp.float32
+
+    def one_layer(k):
+        ka, kr, k1, k2 = jax.random.split(k, 4)
+        pairs = {
+            "attn": L.attn_params(ka, cfg, dtype),
+            "router": L.dense_init(kr, (cfg.d_model, cfg.n_experts),
+                                   ("embed", "experts"), dtype=dtype),
+            "w_gateup": L.dense_init(
+                k1, (cfg.n_experts, cfg.d_model, 2 * cfg.expert_ff),
+                ("experts", "embed", "expert_mlp"),
+                scale=cfg.d_model ** -0.5, dtype=dtype),
+            "w_down": L.dense_init(
+                k2, (cfg.n_experts, cfg.expert_ff, cfg.d_model),
+                ("experts", "expert_mlp", "embed"),
+                scale=cfg.expert_ff ** -0.5, dtype=dtype),
+            "attn_norm": L.ones_init((cfg.d_model,), ("embed",)),
+            "mlp_norm": L.ones_init((cfg.d_model,), ("embed",)),
+        }
+        return L.split_tree(pairs)
+
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    stacked = jax.vmap(lambda k: one_layer(k)[0])(layer_keys)
+    _, axes_one = one_layer(layer_keys[0])
+    layer_axes = jax.tree.map(lambda ax: ("layers",) + ax, axes_one,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    emb, emb_ax = L.dense_init(keys[1], (cfg.padded_vocab, cfg.d_model),
+                               ("embed_vocab", "mlp"), scale=1.0, dtype=dtype)
+    head, head_ax = L.dense_init(keys[2], (cfg.d_model, cfg.padded_vocab),
+                                 ("embed", "vocab"), dtype=dtype)
+    fnorm, fnorm_ax = L.ones_init((cfg.d_model,), ("embed",))
+    return ({"embed": emb, "layers": stacked, "final_norm": fnorm,
+             "lm_head": head},
+            {"embed": emb_ax, "layers": layer_axes, "final_norm": fnorm_ax,
+             "lm_head": head_ax})
+
+
+# --------------------------------------------------------------------------
+# MoE block
+# --------------------------------------------------------------------------
+
+def moe_block(p, x, cfg: ModelConfig):
+    """x: [B, S, D] -> [B, S, D] through top-k routed experts."""
+    b, s, d = x.shape
+    tokens = b * s
+    g = min(GROUP, tokens)
+    n_groups = tokens // g
+    cap = capacity(cfg, g)
+    xt = x.reshape(n_groups, g, d)
+
+    logits = jnp.einsum("ngd,de->nge", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # [N,G,E]
+    topv, topi = lax.top_k(probs, cfg.top_k)                  # [N,G,K]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # position of each routed slot within its expert (slot-major cumsum)
+    onehot = jax.nn.one_hot(topi, cfg.n_experts, dtype=jnp.float32)
+    flat = onehot.reshape(n_groups, g * cfg.top_k, cfg.n_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat                     # [N,G*K,E]
+    pos = jnp.einsum("nse,nse->ns", pos, flat).reshape(
+        n_groups, g, cfg.top_k)                               # [N,G,K]
+    keep = pos < cap
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) \
+        * keep[..., None]                                     # [N,G,K,C]
+    # dispatch [N,G,E,C] / combine (weighted) tensors
+    dispatch = jnp.einsum("ngke,ngkc->ngec", onehot, pos_oh)
+    combine = jnp.einsum("ngke,ngkc,ngk->ngec", onehot, pos_oh, topv)
+
+    dt = cfg.jnp_dtype
+    # dispatch: [E, N, C, D] token blocks (all-to-all under GSPMD when the
+    # group axis is data-sharded and the expert axis is model-sharded)
+    expert_in = jnp.einsum("ngec,ngd->encd", dispatch.astype(dt), xt)
+    expert_in = expert_in.reshape(cfg.n_experts, n_groups * cap, d)
+    h = jnp.einsum("etd,edf->etf", expert_in, p["w_gateup"].astype(dt))
+    h = ops.silu_and_mul(h)
+    out_e = jnp.einsum("etf,efd->etd", h, p["w_down"].astype(dt))
+    out_e = out_e.reshape(cfg.n_experts, n_groups, cap, d)
+    out = jnp.einsum("ngec,encd->ngd", combine.astype(dt), out_e)
+    return out.reshape(b, s, d)
+
+
+# --------------------------------------------------------------------------
+# forward / loss / serving — same skeleton as the dense transformer
+# --------------------------------------------------------------------------
+
+def _block_train(p_layer, carry, cfg: ModelConfig, chunk: int):
+    hidden, residual = carry
+    hidden = L.shard_batch(hidden)
+    residual = L.shard_batch(residual)
+    normed, residual = L.add_rms_norm(hidden, residual,
+                                      p_layer["attn_norm"], cfg.norm_eps)
+    attn_out, _ = L.attention_block(p_layer["attn"], normed, cfg, chunk=chunk)
+    normed, residual = L.add_rms_norm(attn_out, residual,
+                                      p_layer["mlp_norm"], cfg.norm_eps)
+    hidden = moe_block(p_layer, normed, cfg)
+    return hidden, residual
+
+
+def forward(params, cfg: ModelConfig, tokens, *, chunk: int = 512):
+    hidden = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
+    residual = jnp.zeros_like(hidden)
+    block = jax.checkpoint(
+        functools.partial(_block_train, cfg=cfg, chunk=chunk),
+        policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, p_layer):
+        return block(p_layer, carry), None
+
+    (hidden, residual), _ = lax.scan(body, (hidden, residual),
+                                     params["layers"])
+    normed, _ = L.add_rms_norm(hidden, residual, params["final_norm"],
+                               cfg.norm_eps)
+    return L.unembed(normed, params["lm_head"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, chunk: int = 512):
+    logits = forward(params, cfg, batch["tokens"], chunk=chunk)
+    return L.ce_loss(logits, batch["labels"], cfg.vocab)
+
+
+cache_spec = T.cache_spec
+init_cache = T.init_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
+            cache_len: int | None = None):
+    b, s = tokens.shape
+    hidden = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
+    residual = jnp.zeros_like(hidden)
+
+    def block(p_layer, carry):
+        hidden, residual = carry
+        normed, residual = L.add_rms_norm(hidden, residual,
+                                          p_layer["attn_norm"], cfg.norm_eps)
+        attn_out, (k, v) = L.attention_block(p_layer["attn"], normed, cfg,
+                                             chunk=chunk)
+        normed, residual = L.add_rms_norm(attn_out, residual,
+                                          p_layer["mlp_norm"], cfg.norm_eps)
+        hidden = moe_block(p_layer, normed, cfg)
+        return (hidden, residual), (k, v)
+
+    block = jax.checkpoint(block,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, p_layer):
+        return block(p_layer, carry)
+
+    (hidden, residual), (ks, vs) = lax.scan(body, (hidden, residual),
+                                            params["layers"])
+    if cache_len and cache_len > ks.shape[2]:
+        pad = ((0, 0), (0, 0), (0, cache_len - ks.shape[2]), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    cache = {"k": ks, "v": vs}
+    normed, _ = L.add_rms_norm(hidden[:, -1:], residual[:, -1:],
+                               params["final_norm"], cfg.norm_eps)
+    return L.unembed(normed[:, 0], params["lm_head"]), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                seq_shard_axis=None):
+    hidden = L.embed_tokens(params["embed"], token[:, None]) \
+        .astype(cfg.jnp_dtype)
+    residual = jnp.zeros_like(hidden)
+    kv_len = pos + 1
+
+    def body(carry, layer_in):
+        p_layer, k_l, v_l = layer_in
+        hidden, residual = carry
+        normed, residual = L.add_rms_norm(hidden, residual,
+                                          p_layer["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = L.qkv_proj(p_layer["attn"], normed, cfg)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k_new = L.rope(k_new, pos[:, None], cfg.rope_theta)
+        k_l, v_l = L.update_cache(k_l, v_l, k_new[:, 0], v_new[:, 0], pos)
+        o = T._cached_attention(q[:, 0], k_l, v_l, kv_len, cfg,
+                                seq_shard_axis)
+        attn_out = L.out_proj(p_layer["attn"], o[:, None], o.dtype)
+        normed, residual = L.add_rms_norm(attn_out, residual,
+                                          p_layer["mlp_norm"], cfg.norm_eps)
+        hidden = moe_block(p_layer, normed, cfg)
+        return (hidden, residual), (k_l, v_l)
+
+    (hidden, residual), (ks, vs) = lax.scan(
+        body, (hidden, residual), (params["layers"], cache["k"], cache["v"]))
+    normed, _ = L.add_rms_norm(hidden, residual, params["final_norm"],
+                               cfg.norm_eps)
+    return L.unembed(normed[:, 0], params["lm_head"]), {"k": ks, "v": vs}

@@ -1,0 +1,335 @@
+"""RecurrentGemma-2B (Griffin) — RG-LRU recurrent blocks + local MQA
+attention in a 2:1 pattern [arXiv:2402.19427].
+
+Layer pattern: periods of (recurrent, recurrent, local-attention); 26
+layers = 8 scanned periods + 2 recurrent tail layers.
+
+RG-LRU: a_t = exp(-c softplus(Λ) ⊙ r_t); h_t = a_t h_{t-1} +
+sqrt(1-a_t²)(i_t ⊙ x_t). Training/prefill runs it as a PARALLEL
+associative scan (affine composition (a,b)∘(a',b') = (aa', a'b + b')) —
+the production-correct TPU formulation (log-depth, MXU-free); decode is the
+O(1) per-step update. Bounded window + O(1) state = the long_500k story.
+
+Local attention uses the shared sliding-window path (rolling cache), so
+decode consumes the flash-decode kernel and its Kernel-1 merge math.
+Adaptation notes (DESIGN.md): MLP is SwiGLU (exercises paper Kernel 3;
+Gemma's GeGLU differs only in the activation), conv1d width 4 causal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+C_RGLRU = 8.0
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _rec_params(key, cfg, dtype):
+    d, r = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 7)
+    lam = jax.random.uniform(ks[5], (r,), jnp.float32, 0.9, 0.999)
+    return {
+        "norm": L.ones_init((d,), ("embed",)),
+        "w_main": L.dense_init(ks[0], (d, r), ("embed", "lru"), dtype=dtype),
+        "w_gate": L.dense_init(ks[1], (d, r), ("embed", "lru"), dtype=dtype),
+        "conv_w": L.zeros_init((4, r), ("conv", "lru"), dtype),
+        "w_a": L.dense_init(ks[2], (r, r), ("lru", None), dtype=dtype),
+        "w_x": L.dense_init(ks[3], (r, r), ("lru", None), dtype=dtype),
+        # Λ parametrized pre-softplus so a stays in (0, 1)
+        "lam": (jnp.log(jnp.exp(-jnp.log(lam) / C_RGLRU) - 1.0), ("lru",)),
+        "w_out": L.dense_init(ks[4], (r, d), ("lru", "embed"), dtype=dtype),
+        "mlp": L.mlp_params(ks[6], cfg, dtype),
+        "mlp_norm": L.ones_init((d,), ("embed",)),
+    }
+
+
+def _attn_layer_params(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "attn": L.attn_params(ka, cfg, dtype),
+        "mlp": L.mlp_params(km, cfg, dtype),
+        "attn_norm": L.ones_init((cfg.d_model,), ("embed",)),
+        "mlp_norm": L.ones_init((cfg.d_model,), ("embed",)),
+    }
+
+
+def init(cfg: ModelConfig, key):
+    n_periods = cfg.n_layers // 3            # 26 -> 8 periods + 2 tail
+    n_tail = cfg.n_layers - 3 * n_periods
+    keys = jax.random.split(key, 5)
+    dtype = jnp.float32
+
+    def one_period(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        recs = [L.split_tree(_rec_params(kk, cfg, dtype)) for kk in (k1, k2)]
+        rec_stack = jax.tree.map(lambda *ts: jnp.stack(ts),
+                                 *[r[0] for r in recs])
+        att, att_ax = L.split_tree(_attn_layer_params(k3, cfg, dtype))
+        rec_ax = jax.tree.map(lambda ax: ("stack",) + ax, recs[0][1],
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return {"rec": rec_stack, "attn": att}, {"rec": rec_ax, "attn": att_ax}
+
+    p_keys = jax.random.split(keys[0], n_periods)
+    stacked = jax.vmap(lambda k: one_period(k)[0])(p_keys)
+    _, axes_one = one_period(p_keys[0])
+    period_axes = jax.tree.map(lambda ax: ("layers",) + ax, axes_one,
+                               is_leaf=lambda x: isinstance(x, tuple))
+
+    t_keys = jax.random.split(keys[1], max(n_tail, 1))
+    tails = [L.split_tree(_rec_params(kk, cfg, dtype))
+             for kk in t_keys[:n_tail]]
+    tail_stack = jax.tree.map(lambda *ts: jnp.stack(ts),
+                              *[t[0] for t in tails]) if tails else {}
+    tail_axes = jax.tree.map(lambda ax: ("layers",) + ax, tails[0][1],
+                             is_leaf=lambda x: isinstance(x, tuple)) \
+        if tails else {}
+
+    emb, emb_ax = L.dense_init(keys[2], (cfg.padded_vocab, cfg.d_model),
+                               ("embed_vocab", "mlp"), scale=1.0, dtype=dtype)
+    head, head_ax = L.dense_init(keys[3], (cfg.d_model, cfg.padded_vocab),
+                                 ("embed", "vocab"), dtype=dtype)
+    fnorm, fnorm_ax = L.ones_init((cfg.d_model,), ("embed",))
+    return ({"embed": emb, "periods": stacked, "tail": tail_stack,
+             "final_norm": fnorm, "lm_head": head},
+            {"embed": emb_ax, "periods": period_axes, "tail": tail_axes,
+             "final_norm": fnorm_ax, "lm_head": head_ax})
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block
+# --------------------------------------------------------------------------
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv, width 4. x: [B,S,R]; state: [B,3,R] or None."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else None
+    return out, new_state
+
+
+def rglru(p, xi, h0=None):
+    """RG-LRU over a segment. xi: [B,S,R] (conv'd branch). Returns (y, h_S)."""
+    xf = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", xf, p["w_a"]))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", xf, p["w_x"]))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"]) * r        # [B,S,R]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xf)
+    if h0 is not None:
+        # fold the carried state into step 0's offset
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+    # parallel affine scan: (a, b) ∘ (a', b') = (a·a', a'·b + b')
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(xi.dtype), h[:, -1]
+
+
+def rec_block(p, x, cfg: ModelConfig, state=None):
+    """Full Griffin recurrent residual block (+ its MLP sublayer)."""
+    conv_state, h0 = (None, None) if state is None else state
+    normed = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    main = jnp.einsum("bsd,dr->bsr", normed, p["w_main"].astype(x.dtype))
+    gate = jnp.einsum("bsd,dr->bsr", normed, p["w_gate"].astype(x.dtype))
+    main, new_conv = _causal_conv(main, p["conv_w"], conv_state)
+    h, h_last = rglru(p, main, h0)
+    y = h * jax.nn.gelu(gate)
+    y = jnp.einsum("bsr,rd->bsd", y, p["w_out"].astype(x.dtype))
+    x = x + y
+    normed = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    x = x + L.mlp_block(p["mlp"], normed)
+    return x, (new_conv, h_last)
+
+
+def attn_layer(p, x, cfg: ModelConfig, chunk=512):
+    normed = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    attn_out, kv = L.attention_block(p["attn"], normed, cfg, chunk=chunk)
+    x = x + attn_out
+    normed = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    x = x + L.mlp_block(p["mlp"], normed)
+    return x, kv
+
+
+# --------------------------------------------------------------------------
+# model API
+# --------------------------------------------------------------------------
+
+def _period_fwd(p_period, x, cfg, chunk, collect=False):
+    x = L.shard_batch(x)
+    kvs = None
+    for i in range(2):
+        p_i = jax.tree.map(lambda t: t[i], p_period["rec"])
+        x, _ = rec_block(p_i, x, cfg)
+    x, kvs = attn_layer(p_period["attn"], x, cfg, chunk)
+    return x, kvs
+
+
+def forward(params, cfg: ModelConfig, tokens, *, chunk: int = 512):
+    x = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
+
+    def body(x, p_period):
+        fn = jax.checkpoint(
+            lambda p, xx: _period_fwd(p, xx, cfg, chunk)[0],
+            policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(p_period, x), None
+
+    x, _ = lax.scan(body, x, params["periods"])
+    if params["tail"]:
+        def tbody(x, p_rec):
+            return rec_block(p_rec, x, cfg)[0], None
+        x, _ = lax.scan(tbody, x, params["tail"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["lm_head"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, chunk: int = 512):
+    logits = forward(params, cfg, batch["tokens"])
+    return L.ce_loss(logits, batch["labels"], cfg.vocab)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    n_periods = cfg.n_layers // 3
+    n_tail = cfg.n_layers - 3 * n_periods
+    r = cfg.lru_width or cfg.d_model
+    w = min(seq, cfg.window or seq)
+    f32, dt = jnp.float32, cfg.jnp_dtype
+    spec = {
+        "conv": jax.ShapeDtypeStruct((n_periods, 2, batch, 3, r), dt),
+        "h": jax.ShapeDtypeStruct((n_periods, 2, batch, r), f32),
+        "k": jax.ShapeDtypeStruct(
+            (n_periods, batch, w, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jax.ShapeDtypeStruct(
+            (n_periods, batch, w, cfg.n_kv_heads, cfg.head_dim), dt),
+        "tconv": jax.ShapeDtypeStruct((max(n_tail, 1), batch, 3, r), dt),
+        "th": jax.ShapeDtypeStruct((max(n_tail, 1), batch, r), f32),
+    }
+    axes = {
+        "conv": ("layers", "stack", "batch", "conv", "lru"),
+        "h": ("layers", "stack", "batch", "lru"),
+        "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "tconv": ("layers", "batch", "conv", "lru"),
+        "th": ("layers", "batch", "lru"),
+    }
+    return spec, axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    spec, axes = cache_spec(cfg, batch, seq)
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in spec.items()}, axes
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
+            cache_len: int | None = None):
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
+    w = min(s, cfg.window or s)
+
+    def body(x, p_period):
+        states = []
+        for i in range(2):
+            p_i = jax.tree.map(lambda t: t[i], p_period["rec"])
+            x, st = rec_block(p_i, x, cfg)
+            states.append(st)
+        x, (k, v) = attn_layer(p_period["attn"], x, cfg, chunk)
+        conv = jnp.stack([st[0] for st in states])
+        h = jnp.stack([st[1] for st in states])
+        if cfg.window and s > w:
+            pos = jnp.arange(s - w, s)
+            order = jnp.argsort(pos % w)
+            k = k[:, s - w:][:, order]
+            v = v[:, s - w:][:, order]
+        return x, (conv, h, k, v)
+
+    x, (convs, hs, ks, vs) = lax.scan(body, x, params["periods"])
+
+    if params["tail"]:
+        def tbody(x, p_rec):
+            x, st = rec_block(p_rec, x, cfg)
+            return x, st
+        x, (tconv, th) = lax.scan(tbody, x, params["tail"])
+    else:
+        tconv = jnp.zeros((1, b, 3, cfg.lru_width or cfg.d_model),
+                          cfg.jnp_dtype)
+        th = jnp.zeros((1, b, cfg.lru_width or cfg.d_model), jnp.float32)
+
+    target = min(cache_len, cfg.window) if (cache_len and cfg.window) \
+        else cache_len
+    if target and target > ks.shape[2]:
+        pad = ((0, 0), (0, 0), (0, target - ks.shape[2]), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    cache = {"conv": convs, "h": hs, "k": ks, "v": vs,
+             "tconv": tconv, "th": th}
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return L.unembed(x[:, 0], params["lm_head"]), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                seq_shard_axis=None):
+    b = token.shape[0]
+    x = L.embed_tokens(params["embed"], token[:, None]).astype(cfg.jnp_dtype)
+    w = cfg.window
+    slot = pos % w if w else pos
+    kv_len = jnp.minimum(pos + 1, w) if w else pos + 1
+
+    def body(x, inp):
+        p_period, conv, h, k_l, v_l = inp
+        new_conv, new_h = [], []
+        for i in range(2):
+            p_i = jax.tree.map(lambda t: t[i], p_period["rec"])
+            x, (c_i, h_i) = rec_block(p_i, x, cfg,
+                                      (conv[i], h[i]))
+            new_conv.append(c_i)
+            new_h.append(h_i)
+        # local attention decode
+        p_a = p_period["attn"]
+        normed = L.rms_norm(x, p_a["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = L.qkv_proj(p_a["attn"], normed, cfg)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k_new = L.rope(k_new, pos[:, None], cfg.rope_theta)
+        k_l, v_l = L.update_cache(k_l, v_l, k_new[:, 0], v_new[:, 0], slot)
+        from repro.models.transformer import _cached_attention
+        o = _cached_attention(q[:, 0], k_l, v_l, kv_len, cfg, seq_shard_axis)
+        x = x + L.out_proj(p_a["attn"], o[:, None], o.dtype)
+        normed = L.rms_norm(x, p_a["mlp_norm"], cfg.norm_eps)
+        x = x + L.mlp_block(p_a["mlp"], normed)
+        return x, (jnp.stack(new_conv), jnp.stack(new_h), k_l, v_l)
+
+    x, (convs, hs, ks, vs) = lax.scan(
+        body, x, (params["periods"], cache["conv"], cache["h"],
+                  cache["k"], cache["v"]))
+
+    if params["tail"]:
+        def tbody(x, inp):
+            p_rec, tc, th_ = inp
+            x, (c, h) = rec_block(p_rec, x, cfg, (tc, th_))
+            return x, (c, h)
+        x, (tconv, th) = lax.scan(tbody, x, (params["tail"], cache["tconv"],
+                                             cache["th"]))
+    else:
+        tconv, th = cache["tconv"], cache["th"]
+
+    new_cache = {"conv": convs, "h": hs, "k": ks, "v": vs,
+                 "tconv": tconv, "th": th}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x[:, 0], params["lm_head"]), new_cache

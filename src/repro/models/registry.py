@@ -1,0 +1,107 @@
+"""Architecture registry — one uniform API over all model families.
+
+Every family module exposes:
+    init(cfg, key) -> (params, logical_axes)
+    loss_fn(params, cfg, batch) -> scalar        (training)
+    prefill(params, cfg, prompt) -> (logits, cache)
+    decode_step(params, cfg, cache, token, pos, *, seq_shard_axis) -> ...
+    cache_spec(cfg, batch, seq) -> (ShapeDtypeStruct tree, logical axes)
+
+``batch_spec``/``prompt_spec`` build the ShapeDtypeStruct stand-ins for the
+dry-run (no allocation) and the synthetic-data pipeline shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe, recurrentgemma, seamless, transformer, xlstm
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": moe,
+    "xlstm": xlstm,
+    "hybrid": recurrentgemma,
+    "encdec": seamless,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init(cfg: ModelConfig, key):
+    return module_for(cfg).init(cfg, key)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    return module_for(cfg).loss_fn(params, cfg, batch)
+
+
+def prefill(params, cfg: ModelConfig, prompt, *, cache_len=None):
+    return module_for(cfg).prefill(params, cfg, prompt,
+                                   cache_len=cache_len)
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                seq_shard_axis=None):
+    return module_for(cfg).decode_step(params, cfg, cache, token, pos,
+                                       seq_shard_axis=seq_shard_axis)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    return module_for(cfg).cache_spec(cfg, batch, seq)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    return module_for(cfg).init_cache(cfg, batch, seq)
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs; the dry-run's only "data")
+# --------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig, batch: int, seq: int):
+    """Training batch ShapeDtypeStructs + logical shard axes."""
+    i32 = jnp.int32
+    if cfg.frontend == "frames":
+        spec = {"frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               cfg.jnp_dtype),
+                "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+        axes = {"frames": ("batch", None, None), "tokens": ("batch", None),
+                "labels": ("batch", None)}
+    else:
+        spec = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+        axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+    return spec, axes
+
+
+def prompt_spec(cfg: ModelConfig, batch: int, seq: int):
+    """Prefill prompt ShapeDtypeStructs + logical axes."""
+    if cfg.frontend == "frames":
+        return (jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                     cfg.jnp_dtype),
+                ("batch", None, None))
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32), ("batch", None)
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key):
+    """Synthetic concrete batch (smoke tests / examples)."""
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab)
+    out = {"tokens": tokens,
+           "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.frontend == "frames":
+        out["frames"] = jax.random.normal(k2, (batch, seq, cfg.d_model),
+                                          cfg.jnp_dtype)
+    return out
+
+
+def train_batch_arg(cfg: ModelConfig, batch):
+    """The positional arg loss_fn expects (tokens-only families ignore
+    frames)."""
+    return batch

@@ -1,0 +1,241 @@
+"""SeamlessM4T-large-v2 backbone — encoder-decoder transformer
+[arXiv:2308.11596].
+
+Per the assignment, only the transformer BACKBONE is modeled: the audio
+frontend is a STUB — ``input_specs()`` provides precomputed frame
+embeddings [B, S_src, d_model] (the real model's mel-filterbank +
+conformer-conv subsampling happens upstream). Adaptation note (DESIGN.md):
+the speech encoder's conformer convolutions are replaced by plain
+bidirectional transformer layers of the assigned dims; the text decoder is
+causal with cross-attention.
+
+24 encoder + 24 decoder layers (the v2 speech-enc/text-dec split), both
+scanned. Decode keeps two caches: self-attention K/V (grows with generated
+tokens) and cross-attention K/V (computed once from the encoder output).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _cross_attn_params(key, cfg, dtype):
+    return L.attn_params(key, cfg, dtype)
+
+
+def init(cfg: ModelConfig, key):
+    keys = jax.random.split(key, 6)
+    dtype = jnp.float32
+
+    def enc_layer(k):
+        ka, km = jax.random.split(k)
+        return L.split_tree({
+            "attn": L.attn_params(ka, cfg, dtype),
+            "mlp": L.mlp_params(km, cfg, dtype),
+            "attn_norm": L.ones_init((cfg.d_model,), ("embed",)),
+            "mlp_norm": L.ones_init((cfg.d_model,), ("embed",)),
+        })
+
+    def dec_layer(k):
+        ka, kx, km = jax.random.split(k, 3)
+        return L.split_tree({
+            "attn": L.attn_params(ka, cfg, dtype),
+            "cross": _cross_attn_params(kx, cfg, dtype),
+            "mlp": L.mlp_params(km, cfg, dtype),
+            "attn_norm": L.ones_init((cfg.d_model,), ("embed",)),
+            "cross_norm": L.ones_init((cfg.d_model,), ("embed",)),
+            "mlp_norm": L.ones_init((cfg.d_model,), ("embed",)),
+        })
+
+    enc_keys = jax.random.split(keys[0], cfg.enc_layers)
+    dec_keys = jax.random.split(keys[1], cfg.n_layers)
+    enc_stack = jax.vmap(lambda k: enc_layer(k)[0])(enc_keys)
+    dec_stack = jax.vmap(lambda k: dec_layer(k)[0])(dec_keys)
+    _, enc_ax = enc_layer(enc_keys[0])
+    _, dec_ax = dec_layer(dec_keys[0])
+    lift = functools.partial(jax.tree.map, lambda ax: ("layers",) + ax,
+                             is_leaf=lambda x: isinstance(x, tuple))
+
+    emb, emb_ax = L.dense_init(keys[2], (cfg.padded_vocab, cfg.d_model),
+                               ("embed_vocab", "mlp"), scale=1.0, dtype=dtype)
+    head, head_ax = L.dense_init(keys[3], (cfg.d_model, cfg.padded_vocab),
+                                 ("embed", "vocab"), dtype=dtype)
+    return ({"embed": emb, "enc_layers": enc_stack, "dec_layers": dec_stack,
+             "enc_norm": L.ones_init((cfg.d_model,), ("embed",))[0],
+             "final_norm": L.ones_init((cfg.d_model,), ("embed",))[0],
+             "lm_head": head},
+            {"embed": emb_ax, "enc_layers": lift(enc_ax),
+             "dec_layers": lift(dec_ax),
+             "enc_norm": ("embed",), "final_norm": ("embed",),
+             "lm_head": head_ax})
+
+
+# --------------------------------------------------------------------------
+# encoder
+# --------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames, *, chunk: int = 512):
+    """frames: [B, S_src, D] precomputed frame embeddings -> [B, S_src, D]."""
+    x = frames.astype(cfg.jnp_dtype)
+
+    def block(p, x):
+        x = L.shard_batch(x)
+        normed = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        b, s, _ = x.shape
+        q, k, v = L.qkv_proj(p["attn"], normed, cfg)
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q = L.rope(q, pos, cfg.rope_theta)
+        k = L.rope(k, pos, cfg.rope_theta)
+        o = L.flash_attention(q, k, v, False, None, chunk, True)
+        x = x + L.out_proj(p["attn"], o, x.dtype)
+        normed = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        return x + L.mlp_block(p["mlp"], normed)
+
+    block = jax.checkpoint(block,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(x, p):
+        return block(p, x), None
+
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# decoder
+# --------------------------------------------------------------------------
+
+def _dec_block(p, carry, enc_out, cfg, chunk):
+    x = L.shard_batch(carry)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    # causal self-attention
+    normed = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = L.qkv_proj(p["attn"], normed, cfg)
+    q, k = L.rope(q, pos, cfg.rope_theta), L.rope(k, pos, cfg.rope_theta)
+    o = L.flash_attention(q, k, v, True, None, chunk, False)
+    x = x + L.out_proj(p["attn"], o, x.dtype)
+    # cross-attention to the encoder output
+    normed = L.rms_norm(x, p["cross_norm"], cfg.norm_eps)
+    qc, _, _ = L.qkv_proj(p["cross"], normed, cfg)
+    _, kc, vc = L.qkv_proj(p["cross"], enc_out.astype(x.dtype), cfg)
+    oc = L.flash_attention(qc, kc, vc, False, None, chunk, True)
+    x = x + L.out_proj(p["cross"], oc, x.dtype)
+    # MLP
+    normed = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    return x + L.mlp_block(p["mlp"], normed)
+
+
+def forward(params, cfg: ModelConfig, batch, *, chunk: int = 512):
+    """Teacher-forced translation logits.
+
+    batch: {"frames": [B, S_src, D], "tokens": [B, S_tgt]}.
+    """
+    enc_out = encode(params, cfg, batch["frames"], chunk=chunk)
+    x = L.embed_tokens(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+
+    block = jax.checkpoint(
+        lambda p, c: _dec_block(p, c, enc_out, cfg, chunk),
+        policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(x, p):
+        return block(p, x), None
+
+    x, _ = lax.scan(body, x, params["dec_layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["lm_head"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, chunk: int = 512):
+    logits = forward(params, cfg, batch, chunk=chunk)
+    return L.ce_loss(logits, batch["labels"], cfg.vocab)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    """Self cache sized `seq` (generated side) + cross K/V sized `seq`."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.jnp_dtype
+    self_shape = (cfg.n_layers, batch, seq, hkv, dh)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return ({"k": jax.ShapeDtypeStruct(self_shape, dt),
+             "v": jax.ShapeDtypeStruct(self_shape, dt),
+             "ck": jax.ShapeDtypeStruct(self_shape, dt),
+             "cv": jax.ShapeDtypeStruct(self_shape, dt)},
+            {"k": axes, "v": axes, "ck": axes, "cv": axes})
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    spec, axes = cache_spec(cfg, batch, seq)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec), axes
+
+
+def prefill(params, cfg: ModelConfig, frames, *, chunk: int = 512,
+            cache_len: int | None = None):
+    """Encode source frames and precompute cross K/V; self cache empty.
+
+    Returns (BOS logits, cache). frames: [B, S_src, D].
+    """
+    b, s_src, _ = frames.shape
+    enc_out = encode(params, cfg, frames, chunk=chunk)
+
+    def cross_kv(p):
+        _, kc, vc = L.qkv_proj(p["cross"], enc_out.astype(cfg.jnp_dtype), cfg)
+        return kc, vc
+
+    cks, cvs = lax.map(cross_kv, params["dec_layers"])
+    n = cache_len or cks.shape[2]
+    zshape = (cks.shape[0], cks.shape[1], n) + cks.shape[3:]
+    cache = {"k": jnp.zeros(zshape, cks.dtype),
+             "v": jnp.zeros(zshape, cvs.dtype),
+             "ck": cks, "cv": cvs}
+    bos = jnp.zeros((b,), jnp.int32)
+    logits, cache = decode_step(params, cfg, cache, bos,
+                                jnp.zeros((b,), jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                seq_shard_axis=None):
+    from repro.models.transformer import _cached_attention
+    b = token.shape[0]
+    x = L.embed_tokens(params["embed"], token[:, None]).astype(cfg.jnp_dtype)
+    kv_len = pos + 1
+    s_src = cache["ck"].shape[2]
+    src_len = jnp.full((b,), s_src, jnp.int32)
+
+    def body(x, inp):
+        p, k_l, v_l, ck_l, cv_l = inp
+        # self-attention over the generated-token cache
+        normed = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = L.qkv_proj(p["attn"], normed, cfg)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k_new = L.rope(k_new, pos[:, None], cfg.rope_theta)
+        k_l, v_l = L.update_cache(k_l, v_l, k_new[:, 0], v_new[:, 0], pos)
+        o = _cached_attention(q[:, 0], k_l, v_l, kv_len, cfg, seq_shard_axis)
+        x = x + L.out_proj(p["attn"], o[:, None], o.dtype)
+        # cross-attention to the precomputed encoder K/V
+        normed = L.rms_norm(x, p["cross_norm"], cfg.norm_eps)
+        qc, _, _ = L.qkv_proj(p["cross"], normed, cfg)
+        oc = _cached_attention(qc[:, 0], ck_l, cv_l, src_len, cfg,
+                               seq_shard_axis)
+        x = x + L.out_proj(p["cross"], oc[:, None], oc.dtype)
+        normed = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        x = x + L.mlp_block(p["mlp"], normed)
+        return x, (k_l, v_l)
+
+    x, (ks, vs) = lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                     cache["v"], cache["ck"], cache["cv"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x[:, 0], params["lm_head"])
+    return logits, {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"]}

@@ -1,0 +1,240 @@
+"""Dense decoder-only transformer (llama-family).
+
+Covers qwen2-0.5b (GQA kv=2 + QKV bias), yi-34b, qwen3-8b (qk-norm),
+h2o-danube-1.8b (sliding window), and the chameleon-34b backbone
+(early-fusion VQ tokens are ordinary ids in the unified vocab).
+
+Structure: scan-over-layers with stacked parameter pytrees (HLO depth
+O(1)), per-layer remat, and the SGLang fused-add-RMSNorm residual pattern —
+each block consumes paper Kernel 2 twice and Kernel 3 once, decode consumes
+the flash-decode kernel whose combiner is paper Kernel 1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key) -> tuple[dict, dict]:
+    """Returns (params, logical_axes). Layer params are stacked on axis 0."""
+    keys = jax.random.split(key, 4)
+    dtype = jnp.float32  # master weights; compute casts per-use
+
+    def one_layer(k):
+        ka, km = jax.random.split(k)
+        pairs = {
+            "attn": L.attn_params(ka, cfg, dtype),
+            "mlp": L.mlp_params(km, cfg, dtype),
+            "attn_norm": L.ones_init((cfg.d_model,), ("embed",)),
+            "mlp_norm": L.ones_init((cfg.d_model,), ("embed",)),
+        }
+        return L.split_tree(pairs)
+
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    stacked = jax.vmap(lambda k: one_layer(k)[0])(layer_keys)
+    _, axes_one = one_layer(layer_keys[0])
+    layer_axes = jax.tree.map(lambda ax: ("layers",) + ax, axes_one,
+                              is_leaf=lambda x: isinstance(x, tuple))
+
+    emb, emb_ax = L.dense_init(keys[1], (cfg.padded_vocab, cfg.d_model),
+                               ("embed_vocab", "mlp"), scale=1.0, dtype=dtype)
+    head, head_ax = L.dense_init(keys[2], (cfg.d_model, cfg.padded_vocab),
+                                 ("embed", "vocab"), dtype=dtype)
+    fnorm, fnorm_ax = L.ones_init((cfg.d_model,), ("embed",))
+    params = {"embed": emb, "layers": stacked, "final_norm": fnorm,
+              "lm_head": head}
+    axes = {"embed": emb_ax, "layers": layer_axes, "final_norm": fnorm_ax,
+            "lm_head": head_ax}
+    return params, axes
+
+
+# --------------------------------------------------------------------------
+# training / prefill forward
+# --------------------------------------------------------------------------
+
+def _block_train(p_layer, carry, cfg: ModelConfig, chunk: int):
+    hidden, residual = carry
+    hidden = L.shard_batch(hidden)
+    residual = L.shard_batch(residual)
+    normed, residual = L.add_rms_norm(hidden, residual,
+                                      p_layer["attn_norm"], cfg.norm_eps)
+    attn_out, _ = L.attention_block(p_layer["attn"], normed, cfg, chunk=chunk)
+    normed, residual = L.add_rms_norm(attn_out, residual,
+                                      p_layer["mlp_norm"], cfg.norm_eps)
+    hidden = L.mlp_block(p_layer["mlp"], normed)
+    return hidden, residual
+
+
+def forward(params, cfg: ModelConfig, tokens, *, chunk: int = 512):
+    """Teacher-forced logits [B, S, V_pad] (compute dtype = cfg.dtype)."""
+    hidden = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
+    residual = jnp.zeros_like(hidden)
+
+    block = jax.checkpoint(
+        functools.partial(_block_train, cfg=cfg, chunk=chunk),
+        policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, p_layer):
+        return block(p_layer, carry), None
+
+    (hidden, residual), _ = lax.scan(body, (hidden, residual),
+                                     params["layers"])
+    normed, _ = L.add_rms_norm(hidden, residual, params["final_norm"],
+                               cfg.norm_eps)
+    return L.unembed(normed, params["lm_head"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, chunk: int = 512):
+    """Next-token cross-entropy; batch = {"tokens", "labels"} of [B, S]."""
+    logits = forward(params, cfg, batch["tokens"], chunk=chunk)
+    return L.ce_loss(logits, batch["labels"], cfg.vocab)
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + single-token decode over a KV cache
+# --------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    """(ShapeDtypeStruct cache tree, logical axes). Sliding-window archs
+    keep a rolling window-sized cache."""
+    s = min(seq, cfg.window) if cfg.window else seq
+    shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return ({"k": jax.ShapeDtypeStruct(shape, cfg.jnp_dtype),
+             "v": jax.ShapeDtypeStruct(shape, cfg.jnp_dtype)},
+            {"k": axes, "v": axes})
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    spec, axes = cache_spec(cfg, batch, seq)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec), axes
+
+
+def _block_prefill(p_layer, carry, cfg: ModelConfig, chunk: int):
+    hidden, residual = carry
+    hidden = L.shard_batch(hidden)
+    residual = L.shard_batch(residual)
+    normed, residual = L.add_rms_norm(hidden, residual,
+                                      p_layer["attn_norm"], cfg.norm_eps)
+    attn_out, (k, v) = L.attention_block(p_layer["attn"], normed, cfg,
+                                         chunk=chunk)
+    normed, residual = L.add_rms_norm(attn_out, residual,
+                                      p_layer["mlp_norm"], cfg.norm_eps)
+    hidden = L.mlp_block(p_layer["mlp"], normed)
+    return (hidden, residual), (k, v)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
+            cache_len: int | None = None):
+    """Process the prompt; returns (last-position logits, filled cache).
+    ``cache_len`` pre-sizes the cache for subsequent decode_steps."""
+    b, s = tokens.shape
+    hidden = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
+    residual = jnp.zeros_like(hidden)
+
+    block = jax.checkpoint(
+        functools.partial(_block_prefill, cfg=cfg, chunk=chunk),
+        policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, p_layer):
+        carry, kv = block(p_layer, carry)
+        return carry, kv
+
+    (hidden, residual), (ks, vs) = lax.scan(body, (hidden, residual),
+                                            params["layers"])
+    if cfg.window and s > cfg.window:
+        # rolling cache keeps the last `window` positions, laid out at
+        # slot = pos % window
+        w = cfg.window
+        pos = jnp.arange(s - w, s)
+        slots = pos % w
+        order = jnp.argsort(slots)
+        ks = ks[:, :, s - w:][:, :, order]
+        vs = vs[:, :, s - w:][:, :, order]
+    target = min(cache_len, cfg.window) if (cache_len and cfg.window) \
+        else cache_len
+    if target and target > ks.shape[2]:
+        pad = ((0, 0), (0, 0), (0, target - ks.shape[2]), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    cache = {"k": ks, "v": vs}
+    normed, _ = L.add_rms_norm(hidden[:, -1:], residual[:, -1:],
+                               params["final_norm"], cfg.norm_eps)
+    return L.unembed(normed[:, 0], params["lm_head"]), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                seq_shard_axis=None):
+    """One decode step. token: [B] ids; pos: [B] absolute positions.
+    Returns (logits [B, V_pad], updated cache)."""
+    hidden = L.embed_tokens(params["embed"], token[:, None]) \
+        .astype(cfg.jnp_dtype)                                  # [B,1,D]
+    residual = jnp.zeros_like(hidden)
+    w = cfg.window
+    slot = pos % w if w else pos
+    kv_len = jnp.minimum(pos + 1, w) if w else pos + 1
+
+    # The cache rides in the scan CARRY and is updated in place with
+    # dynamic_update_index_in_dim — XLA aliases carry updates, so only the
+    # touched layer slice moves. Passing it as scan xs/ys instead forces a
+    # whole-cache read + write every decode step (§Perf hillclimb C).
+    def body(carry, layer_in):
+        p_layer, li = layer_in
+        hidden, residual, ks, vs = carry
+        k_l = lax.dynamic_index_in_dim(ks, li, 0, keepdims=False)
+        v_l = lax.dynamic_index_in_dim(vs, li, 0, keepdims=False)
+        normed, residual = L.add_rms_norm(hidden, residual,
+                                          p_layer["attn_norm"], cfg.norm_eps)
+        # project + rope the new token, write it into the cache first
+        q, k_new, v_new = L.qkv_proj(p_layer["attn"], normed, cfg)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k_new = L.rope(k_new, pos[:, None], cfg.rope_theta)
+        k_l, v_l = L.update_cache(k_l, v_l, k_new[:, 0], v_new[:, 0], slot)
+        ks = lax.dynamic_update_index_in_dim(ks, k_l, li, 0)
+        vs = lax.dynamic_update_index_in_dim(vs, v_l, li, 0)
+        o = _cached_attention(q[:, 0], k_l, v_l, kv_len, cfg,
+                              seq_shard_axis)
+        attn_out = L.out_proj(p_layer["attn"], o[:, None], o.dtype)
+        normed, residual = L.add_rms_norm(attn_out, residual,
+                                          p_layer["mlp_norm"], cfg.norm_eps)
+        hidden = L.mlp_block(p_layer["mlp"], normed)
+        return (hidden, residual, ks, vs), None
+
+    (hidden, residual, ks, vs), _ = lax.scan(
+        body, (hidden, residual, cache["k"], cache["v"]),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    normed, _ = L.add_rms_norm(hidden, residual, params["final_norm"],
+                               cfg.norm_eps)
+    logits = L.unembed(normed[:, 0], params["lm_head"])
+    return logits, {"k": ks, "v": vs}
+
+
+def _cached_attention(q, k_cache, v_cache, kv_len, cfg: ModelConfig,
+                      seq_shard_axis):
+    """Decode attention over the cache; seq-sharded split-KV when mapped."""
+    from repro.kernels import ops
+    if seq_shard_axis is None:
+        return ops.flash_decode_attention(q, k_cache, v_cache, kv_len=kv_len)
+    idx = lax.axis_index(seq_shard_axis)
+    shard = k_cache.shape[1]
+    local_len = jnp.clip(kv_len - idx * shard, 0, shard)
+    o_part, lse = ops.flash_decode_attention(
+        q, k_cache, v_cache, kv_len=local_len, return_lse=True)
+    o_part = jnp.where(jnp.isneginf(lse)[..., None], 0.0,
+                       o_part.astype(jnp.float32))
+    m = lax.pmax(lse, seq_shard_axis)
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    w = jnp.where(jnp.isneginf(lse), 0.0, jnp.exp(lse - m_safe))
+    num = lax.psum(w[..., None] * o_part, seq_shard_axis)
+    den = lax.psum(w, seq_shard_axis)
+    return (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)

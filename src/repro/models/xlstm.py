@@ -1,0 +1,387 @@
+"""xLSTM (sLSTM + mLSTM blocks) — xlstm-1.3b [arXiv:2405.04517].
+
+Block mix follows the cited 1.3B model's xLSTM[7:1] recipe: periods of
+8 blocks = 7 mLSTM + 1 sLSTM, scanned over periods (stacked params).
+
+mLSTM: matrix memory C [d_qk, d_v] per head with exponential input gate and
+log-space max-stabilizer m (the paper's eq. 19-27). Sequence processing is
+an outer scan over chunks with the inner per-step scan rematerialized —
+chunk-boundary states are the only saved residuals (the production TPU path
+would be a chunkwise matmul kernel; noted in DESIGN.md / roofline).
+
+sLSTM: scalar memory per unit with exponential gating — a true nonlinear
+recurrence (not parallelizable), scanned per step.
+
+Decode state is O(1) in sequence length — this is why the arch runs the
+long_500k cell. No softmax attention exists here, so paper Kernel 1 is
+inapplicable to the mixer (DESIGN.md §Arch-applicability); pre-norms use
+the fused add+RMSNorm kernel and gates use SiLU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+CHUNK = 64  # remat chunk for the recurrent scans
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    dh = d_inner // cfg.n_heads
+    dqk = dh // 2
+    return d_inner, dh, dqk
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _mlstm_params(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    d_inner, dh, dqk = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": L.ones_init((d,), ("embed",)),
+        "w_up": L.dense_init(ks[0], (d, d_inner), ("embed", "mlp"), dtype=dtype),
+        "w_gate": L.dense_init(ks[1], (d, d_inner), ("embed", "mlp"), dtype=dtype),
+        # block-diagonal per-head projections
+        "w_q": L.dense_init(ks[2], (h, dh, dqk), ("heads", "head_dim", None), dtype=dtype),
+        "w_k": L.dense_init(ks[3], (h, dh, dqk), ("heads", "head_dim", None), dtype=dtype),
+        "w_v": L.dense_init(ks[4], (h, dh, dh), ("heads", "head_dim", None), dtype=dtype),
+        "w_i": L.dense_init(ks[5], (h, dh), ("heads", "head_dim"), dtype=dtype),
+        "w_f": L.dense_init(ks[6], (h, dh), ("heads", "head_dim"), dtype=dtype),
+        "w_down": L.dense_init(ks[7], (d_inner, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _slstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": L.ones_init((d,), ("embed",)),
+        "w_z": L.dense_init(ks[0], (d, d), ("embed", "mlp"), dtype=dtype),
+        "w_i": L.dense_init(ks[1], (d, d), ("embed", "mlp"), dtype=dtype),
+        "w_f": L.dense_init(ks[2], (d, d), ("embed", "mlp"), dtype=dtype),
+        "w_o": L.dense_init(ks[3], (d, d), ("embed", "mlp"), dtype=dtype),
+        "w_down": L.dense_init(ks[4], (d, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def init(cfg: ModelConfig, key):
+    period = 8
+    n_periods = cfg.n_layers // period          # 48 -> 6 periods of 7m+1s
+    n_m = period - 1
+    keys = jax.random.split(key, 4)
+    dtype = jnp.float32
+
+    def one_period(k):
+        km, ks_ = jax.random.split(k)
+        m_keys = jax.random.split(km, n_m)
+        m_stack = jax.vmap(lambda kk: L.split_tree(
+            _mlstm_params(kk, cfg, dtype))[0])(m_keys)
+        _, m_axes = L.split_tree(_mlstm_params(m_keys[0], cfg, dtype))
+        s_params, s_axes = L.split_tree(_slstm_params(ks_, cfg, dtype))
+        return ({"mlstm": m_stack, "slstm": s_params},
+                {"mlstm": jax.tree.map(lambda ax: ("stack",) + ax, m_axes,
+                                       is_leaf=lambda x: isinstance(x, tuple)),
+                 "slstm": s_axes})
+
+    p_keys = jax.random.split(keys[0], n_periods)
+    stacked = jax.vmap(lambda k: one_period(k)[0])(p_keys)
+    _, axes_one = one_period(p_keys[0])
+    period_axes = jax.tree.map(lambda ax: ("layers",) + ax, axes_one,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    emb, emb_ax = L.dense_init(keys[1], (cfg.padded_vocab, cfg.d_model),
+                               ("embed_vocab", "mlp"), scale=1.0, dtype=dtype)
+    head, head_ax = L.dense_init(keys[2], (cfg.d_model, cfg.padded_vocab),
+                                 ("embed", "vocab"), dtype=dtype)
+    fnorm, fnorm_ax = L.ones_init((cfg.d_model,), ("embed",))
+    return ({"embed": emb, "periods": stacked, "final_norm": fnorm,
+             "lm_head": head},
+            {"embed": emb_ax, "periods": period_axes, "final_norm": fnorm_ax,
+             "lm_head": head_ax})
+
+
+# --------------------------------------------------------------------------
+# mLSTM cell
+# --------------------------------------------------------------------------
+
+def _mlstm_qkvif(p, x, cfg):
+    """x: [B,S,D] -> per-head q,k,v and log-gates. Shapes [B,S,H,*]."""
+    d_inner, dh, dqk = _dims(cfg)
+    b, s, _ = x.shape
+    u = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(x.dtype))
+    uh = u.reshape(b, s, cfg.n_heads, dh)
+    q = jnp.einsum("bshe,heq->bshq", uh, p["w_q"].astype(x.dtype))
+    k = jnp.einsum("bshe,heq->bshq", uh, p["w_k"].astype(x.dtype)) \
+        * (dqk ** -0.5)
+    v = jnp.einsum("bshe,hev->bshv", uh, p["w_v"].astype(x.dtype))
+    log_i = jnp.einsum("bshe,he->bsh", uh.astype(jnp.float32),
+                       p["w_i"].astype(jnp.float32))
+    log_f = -jax.nn.softplus(-jnp.einsum(
+        "bshe,he->bsh", uh.astype(jnp.float32),
+        p["w_f"].astype(jnp.float32)))       # log sigmoid(f̃)
+    return q, k, v, log_i, log_f, z
+
+
+def _mlstm_step(state, inp):
+    """One mLSTM timestep. state: (C [B,H,K,V], n [B,H,K], m [B,H])."""
+    C, n, m = state
+    q, k, v, log_i, log_f = inp              # [B,H,K],[B,H,K],[B,H,V],[B,H]
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_ = jnp.exp(log_i - m_new)[..., None]                  # [B,H,1]
+    f_ = jnp.exp(log_f + m - m_new)[..., None]
+    C = f_[..., None] * C + i_[..., None] * (k[..., :, None] * v[..., None, :])
+    n = f_ * n + i_ * k
+    h_num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    h_den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q))
+    h = h_num / jnp.maximum(h_den, jnp.exp(-m_new))[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_scan(state, q, k, v, log_i, log_f):
+    """Scan a [B,S,...] segment through the cell; returns (state, h)."""
+    def body(st, xs):
+        return _mlstm_step(st, xs)
+    xs = (jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(log_i, 1, 0), jnp.moveaxis(log_f, 1, 0))
+    state, hs = lax.scan(body, state, xs)
+    return state, jnp.moveaxis(hs, 0, 1)                     # [B,S,H,V]
+
+
+def mlstm_block(p, x, cfg: ModelConfig, state=None):
+    """Full mLSTM residual block. x: [B,S,D]. Returns (y, state)."""
+    b, s, d = x.shape
+    d_inner, dh, dqk = _dims(cfg)
+    normed = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v, log_i, log_f, z = _mlstm_qkvif(p, normed, cfg)
+    if state is None:
+        state = (jnp.zeros((b, cfg.n_heads, dqk, dh), jnp.float32),
+                 jnp.zeros((b, cfg.n_heads, dqk), jnp.float32),
+                 jnp.full((b, cfg.n_heads), -1e30, jnp.float32))
+
+    if s == 1:
+        xs = tuple(t[:, 0] for t in
+                   (q.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32), log_i, log_f))
+        state, h = _mlstm_step(state, xs)
+        h = h[:, None]
+    else:
+        # outer scan over remat chunks; inner per-step scan recomputed in
+        # backward (only chunk-boundary states are saved). The whole sweep
+        # is named_scope'd as ONE fused kernel region: the TPU target (a
+        # GLA-style Pallas linear-scan kernel) streams q,k,v,gates once and
+        # keeps (C,n,m) in VMEM — per-token state churn never touches HBM.
+        # Costed analytically in roofline/analysis.kernel_traffic.
+        with jax.named_scope("mlstm_kernel"):
+            n_chunks = max(1, s // CHUNK)
+            c = s // n_chunks
+
+            def chunk_fn(st, xs):
+                return jax.checkpoint(
+                    lambda st_, xs_: _mlstm_scan(st_, *xs_))(st, xs)
+
+            def reshape(t):
+                return jnp.moveaxis(
+                    t.reshape(b, n_chunks, c, *t.shape[2:]), 1, 0)
+
+            state, h = lax.scan(
+                chunk_fn, state,
+                tuple(reshape(t) for t in (q, k, v, log_i, log_f)))
+            h = jnp.moveaxis(h, 0, 1).reshape(b, s, cfg.n_heads, dh)
+
+    h = h.reshape(b, s, d_inner).astype(x.dtype)
+    h = h * jax.nn.silu(z)                       # output gate (SiLU)
+    y = jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(x.dtype))
+    return x + y, state
+
+
+# --------------------------------------------------------------------------
+# sLSTM cell
+# --------------------------------------------------------------------------
+
+def slstm_block(p, x, cfg: ModelConfig, state=None):
+    """Scalar-memory LSTM block with exponential gating. x: [B,S,D]."""
+    b, s, d = x.shape
+    normed = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    zt = jnp.einsum("bsd,de->bse", normed, p["w_z"].astype(x.dtype))
+    it = jnp.einsum("bsd,de->bse", normed, p["w_i"].astype(x.dtype)) \
+        .astype(jnp.float32)
+    ft = jnp.einsum("bsd,de->bse", normed, p["w_f"].astype(x.dtype)) \
+        .astype(jnp.float32)
+    ot = jnp.einsum("bsd,de->bse", normed, p["w_o"].astype(x.dtype))
+    if state is None:
+        state = (jnp.zeros((b, d), jnp.float32),
+                 jnp.zeros((b, d), jnp.float32),
+                 jnp.full((b, d), -1e30, jnp.float32))
+
+    def step(st, inp):
+        c_, n_, m_ = st
+        z_, i_, f_ = inp
+        log_f = -jax.nn.softplus(-f_)
+        m_new = jnp.maximum(log_f + m_, i_)
+        iw = jnp.exp(i_ - m_new)
+        fw = jnp.exp(log_f + m_ - m_new)
+        c_new = fw * c_ + iw * jnp.tanh(z_)
+        n_new = fw * n_ + iw
+        h = c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new), h
+
+    if s == 1:
+        state, h = step(state, (zt[:, 0].astype(jnp.float32),
+                                it[:, 0], ft[:, 0]))
+        h = h[:, None]
+    else:
+        # fused-kernel region (see mlstm_block): stream z,i,f once, state
+        # stays in VMEM on the TPU target
+        with jax.named_scope("slstm_kernel"):
+            n_chunks = max(1, s // CHUNK)
+            c = s // n_chunks
+
+            def chunk_fn(st, xs):
+                def inner(st_, xs_):
+                    st2, hs = lax.scan(
+                        step, st_,
+                        tuple(jnp.moveaxis(t, 1, 0) for t in xs_))
+                    return st2, jnp.moveaxis(hs, 0, 1)
+                return jax.checkpoint(inner)(st, xs)
+
+            def reshape(t):
+                return jnp.moveaxis(
+                    t.reshape(b, n_chunks, c, *t.shape[2:]), 1, 0)
+            state, h = lax.scan(chunk_fn, state,
+                                (reshape(zt.astype(jnp.float32)),
+                                 reshape(it), reshape(ft)))
+            h = jnp.moveaxis(h, 0, 1).reshape(b, s, d)
+
+    h = h.astype(x.dtype) * jax.nn.sigmoid(ot)
+    y = jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(x.dtype))
+    return x + y, state
+
+
+# --------------------------------------------------------------------------
+# model-level API
+# --------------------------------------------------------------------------
+
+def _period_fwd(p_period, x, cfg, m_states=None, s_state=None):
+    """7 mLSTM (inner scan over stacked params) + 1 sLSTM."""
+    x = L.shard_batch(x)
+    out_m_states = []
+    n_m = jax.tree.leaves(p_period["mlstm"])[0].shape[0]
+    if m_states is None:
+        for i in range(n_m):
+            p_i = jax.tree.map(lambda t: t[i], p_period["mlstm"])
+            x, st = mlstm_block(p_i, x, cfg)
+            out_m_states.append(st)
+    else:
+        for i in range(n_m):
+            p_i = jax.tree.map(lambda t: t[i], p_period["mlstm"])
+            st_i = jax.tree.map(lambda t: t[i], m_states)
+            x, st = mlstm_block(p_i, x, cfg, st_i)
+            out_m_states.append(st)
+    x, s_state = slstm_block(p_period["slstm"], x, cfg, s_state)
+    m_stack = jax.tree.map(lambda *ts: jnp.stack(ts), *out_m_states)
+    return x, m_stack, s_state
+
+
+def forward(params, cfg: ModelConfig, tokens, *, chunk: int = 512):
+    x = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
+
+    def body(x, p_period):
+        x, _, _ = _period_fwd(p_period, x, cfg)
+        return x, None
+
+    x, _ = lax.scan(body, x, params["periods"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["lm_head"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, chunk: int = 512):
+    logits = forward(params, cfg, batch["tokens"])
+    return L.ce_loss(logits, batch["labels"], cfg.vocab)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    """Recurrent state 'cache' — O(1) in seq (this is the long_500k story)."""
+    d_inner, dh, dqk = _dims(cfg)
+    period = 8
+    n_p, n_m, h, d = cfg.n_layers // period, period - 1, cfg.n_heads, cfg.d_model
+    f32 = jnp.float32
+    spec = {
+        "mC": jax.ShapeDtypeStruct((n_p, n_m, batch, h, dqk, dh), f32),
+        "mn": jax.ShapeDtypeStruct((n_p, n_m, batch, h, dqk), f32),
+        "mm": jax.ShapeDtypeStruct((n_p, n_m, batch, h), f32),
+        "sc": jax.ShapeDtypeStruct((n_p, batch, d), f32),
+        "sn": jax.ShapeDtypeStruct((n_p, batch, d), f32),
+        "sm": jax.ShapeDtypeStruct((n_p, batch, d), f32),
+    }
+    axes = {
+        "mC": ("layers", "stack", "batch", "heads", None, "lru"),
+        "mn": ("layers", "stack", "batch", "heads", None),
+        "mm": ("layers", "stack", "batch", "heads"),
+        "sc": ("layers", "batch", "mlp"),
+        "sn": ("layers", "batch", "mlp"),
+        "sm": ("layers", "batch", "mlp"),
+    }
+    return spec, axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    spec, axes = cache_spec(cfg, batch, seq)
+    z = {k: jnp.zeros(v.shape, v.dtype) for k, v in spec.items()}
+    z["mm"] = jnp.full(z["mm"].shape, -1e30, jnp.float32)
+    z["sm"] = jnp.full(z["sm"].shape, -1e30, jnp.float32)
+    return z, axes
+
+
+def _state_of(cache, kind):
+    if kind == "m":
+        return (cache["mC"], cache["mn"], cache["mm"])
+    return (cache["sc"], cache["sn"], cache["sm"])
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
+            cache_len: int | None = None):
+    """Run the prompt through the recurrence, collecting final states.
+    ``cache_len`` is irrelevant: the state is O(1) in sequence length."""
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
+
+    def body(x, p_period):
+        x, m_stack, s_state = _period_fwd(p_period, x, cfg)
+        return x, (m_stack, s_state)
+
+    x, (m_all, s_all) = lax.scan(body, x, params["periods"])
+    cache = {"mC": m_all[0], "mn": m_all[1], "mm": m_all[2],
+             "sc": s_all[0], "sn": s_all[1], "sm": s_all[2]}
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return L.unembed(x[:, 0], params["lm_head"]), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                seq_shard_axis=None):
+    x = L.embed_tokens(params["embed"], token[:, None]).astype(cfg.jnp_dtype)
+
+    def body(x, inp):
+        p_period, mC, mn, mm, sc, sn, sm = inp
+        x, m_stack, s_state = _period_fwd(p_period, x, cfg,
+                                          (mC, mn, mm), (sc, sn, sm))
+        return x, (m_stack, s_state)
+
+    x, (m_all, s_all) = lax.scan(
+        body, x, (params["periods"], cache["mC"], cache["mn"], cache["mm"],
+                  cache["sc"], cache["sn"], cache["sm"]))
+    new_cache = {"mC": m_all[0], "mn": m_all[1], "mm": m_all[2],
+                 "sc": s_all[0], "sn": s_all[1], "sm": s_all[2]}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x[:, 0], params["lm_head"]), new_cache

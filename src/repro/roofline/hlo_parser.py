@@ -1,0 +1,283 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — with
+scan-over-layers and microbatch grad-accum, that undercounts flops, bytes
+and (critically) the collective schedule by the product of trip counts.
+This parser walks the optimized SPMD module text:
+
+  * computations are parsed into op lists with a per-computation symbol
+    table (op -> shape) so dot contraction sizes are recoverable;
+  * ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` —
+    bodies/conditions are charged trip-count times;
+  * fusion/call/to_apply edges propagate multipliers transitively;
+  * flops: dot/convolution (2*out*contract) + 1/elem for arithmetic ops;
+  * HBM traffic: operand+output bytes of fusions, dots, copies, gathers,
+    scatters (the fusion boundary IS the HBM round trip in XLA's model);
+  * collective bytes: payload of all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute, with ring factors (all-reduce 2x).
+
+Everything is per-chip (the module is the per-device SPMD program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:to_apply|body|condition|calls)=%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_COLL_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0, "ragged-all-to-all": 1.0,
+}
+_ARITH_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "sign",
+}
+_ARITH_XFLOP = {"exponential": 8, "log": 8, "tanh": 8, "rsqrt": 4,
+                "sqrt": 4, "power": 10, "logistic": 8, "sine": 8,
+                "cosine": 8, "exponential-minus-one": 8, "log-plus-one": 8,
+                "erf": 8, "cbrt": 8, "atan2": 10}
+_TRAFFIC_OPS = {"fusion", "copy", "gather", "scatter", "dot", "convolution",
+                "dynamic-slice", "dynamic-update-slice", "transpose",
+                "reduce", "broadcast", "iota", "concatenate", "reverse",
+                "slice", "pad", "sort", "cholesky", "triangular-solve"}
+_KERNEL_SCOPE_RE = re.compile(
+    r"(flash|mlstm|slstm|rglru)_kernel")
+
+
+def _shape_elems_bytes(shape_str: str):
+    """Total (elems, bytes) over every typed buffer in a shape string."""
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    out_shape: str
+    rhs: str
+    operands: list
+    callees: list
+    trip: int = 1
+
+
+class Module:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[_Op]] = {}
+        self.shapes: dict[tuple, str] = {}     # (comp, op) -> shape str
+        self._parse(text)
+        self._memo: dict[str, dict] = {}
+
+    # -- parsing -------------------------------------------------------------
+    def _parse(self, text: str):
+        comp = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line or line.startswith("//"):
+                continue
+            header = None
+            if line.startswith("ENTRY"):
+                header = "ENTRY"
+            elif line.startswith("%") and line.endswith("{"):
+                header = line[1:].split(" ", 1)[0].split("(")[0]
+            if header is not None:
+                if header == "ENTRY":
+                    header = line.split("%", 1)[1].split(" ", 1)[0] \
+                        .split("(")[0]
+                    self.entry = header
+                comp = header
+                self.computations[comp] = []
+                continue
+            if comp is None:
+                continue
+            if line.startswith("}"):
+                comp = None
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            # rhs = "<shape> <opcode>(...)" — tuple shapes contain nested
+            # parens and /*index=N*/ comments, so scan for balance.
+            if rhs.startswith("("):
+                depth = 0
+                shape_end = -1
+                for i, ch in enumerate(rhs):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            shape_end = i + 1
+                            break
+                if shape_end < 0:
+                    continue
+                out_shape = rhs[:shape_end]
+                om = re.match(r"\s*([\w\-]+)\(", rhs[shape_end:])
+                if not om:
+                    continue
+                opcode = om.group(1)
+                arg_str = rhs[shape_end + om.end():]
+            else:
+                om = re.match(r"(\S+)\s+([\w\-]+)\(", rhs)
+                if not om:
+                    continue
+                out_shape, opcode = om.group(1), om.group(2)
+                arg_str = rhs[om.end():]
+            callees = _CALL_ATTR_RE.findall(rhs)
+            # operands: %names inside the first (...) group only
+            depth, i, end = 1, 0, len(arg_str)
+            while i < len(arg_str) and depth:
+                if arg_str[i] == "(":
+                    depth += 1
+                elif arg_str[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                i += 1
+            operands = _OPERAND_RE.findall(arg_str[:end])
+            trip = 1
+            tm = _TRIP_RE.search(rhs)
+            if tm:
+                trip = int(tm.group(1))
+            op = _Op(name, opcode, out_shape, rhs, operands, callees, trip)
+            self.computations[comp].append(op)
+            self.shapes[(comp, name)] = out_shape
+
+    # -- costing -------------------------------------------------------------
+    def _dot_flops(self, comp: str, op: _Op) -> float:
+        out_elems, _ = _shape_elems_bytes(op.out_shape)
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rhs)
+        if not cm or not op.operands:
+            return 2.0 * out_elems
+        lhs_shape = self.shapes.get((comp, op.operands[0]), "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        if not sm:
+            return 2.0 * out_elems
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        contract = 1
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+        return 2.0 * out_elems * contract
+
+    def _op_cost(self, comp: str, op: _Op) -> dict:
+        flops = 0.0
+        traffic = 0.0
+        coll = defaultdict(float)
+        out_elems, out_bytes = _shape_elems_bytes(op.out_shape)
+        kind = op.opcode
+        base = kind.replace("-start", "")
+        if base in _COLL_FACTOR and not kind.endswith("-done"):
+            coll[base] += out_bytes * _COLL_FACTOR[base]
+            traffic += out_bytes
+        elif kind == "dot":
+            flops += self._dot_flops(comp, op)
+        elif kind == "convolution":
+            flops += 2.0 * out_elems * 128  # rare here; coarse
+        elif kind in _ARITH_1FLOP:
+            flops += out_elems
+        elif kind in _ARITH_XFLOP:
+            flops += out_elems * _ARITH_XFLOP[kind]
+        elif kind == "reduce":
+            flops += out_elems  # ~1 op per output elem per reduced elem is
+            # overcounted inside fusions; reduces outside fusions are rare
+        in_fused = "fused" in comp
+        # named_scope "*_kernel" marks regions that are ONE fused Pallas
+        # kernel on the TPU target — interior tensors live in VMEM, so their
+        # XLA-CPU fusion round trips are not TPU HBM traffic. The analytic
+        # kernel traffic is added back by roofline/analysis.kernel_traffic.
+        in_kernel = _KERNEL_SCOPE_RE.search(op.rhs) is not None
+        if kind in _TRAFFIC_OPS and not in_fused and not in_kernel:
+            op_bytes = [ _shape_elems_bytes(self.shapes[(comp, o)])[1]
+                         for o in op.operands
+                         if (comp, o) in self.shapes ]
+            if kind == "dynamic-slice":
+                traffic += 2 * out_bytes            # read + write the slice
+            elif kind in ("dynamic-update-slice", "scatter"):
+                # in-place update: only the touched region moves
+                if op_bytes:
+                    traffic += 2 * (sum(op_bytes) - max(op_bytes))
+            elif kind == "fusion" and self._fusion_slices(op):
+                # fusion wrapping a slice/update of a scan-carried buffer:
+                # the big operand (and, for updates, the aliased output)
+                # is not streamed — only the touched region moves
+                if op_bytes:
+                    rest = sum(op_bytes) - max(op_bytes)
+                    traffic += (2 * rest if self._fusion_updates(op)
+                                else out_bytes + rest)
+            else:
+                traffic += out_bytes + sum(op_bytes)
+        return {"flops": flops, "traffic": traffic, "coll": dict(coll)}
+
+    def _fusion_slices(self, op: _Op) -> bool:
+        return any(o2.opcode in ("dynamic-slice", "dynamic-update-slice",
+                                 "scatter")
+                   for c in op.callees
+                   for o2 in self.computations.get(c, []))
+
+    def _fusion_updates(self, op: _Op) -> bool:
+        return any(o2.opcode in ("dynamic-update-slice", "scatter")
+                   for c in op.callees
+                   for o2 in self.computations.get(c, []))
+
+    def comp_cost(self, comp: str) -> dict:
+        """Aggregate cost of one computation incl. its callees."""
+        if comp in self._memo:
+            return self._memo[comp]
+        total = {"flops": 0.0, "traffic": 0.0, "coll": defaultdict(float)}
+        for op in self.computations.get(comp, []):
+            c = self._op_cost(comp, op)
+            mult = op.trip if op.opcode == "while" else 1
+            total["flops"] += c["flops"]
+            total["traffic"] += c["traffic"]
+            for k, v in c["coll"].items():
+                total["coll"][k] += v
+            for callee in op.callees:
+                sub = self.comp_cost(callee)
+                total["flops"] += sub["flops"] * mult
+                total["traffic"] += sub["traffic"] * mult
+                for k, v in sub["coll"].items():
+                    total["coll"][k] += v * mult
+        out = {"flops": total["flops"], "traffic": total["traffic"],
+               "coll": dict(total["coll"])}
+        self._memo[comp] = out
+        return out
+
+    def entry_cost(self) -> dict:
+        c = self.comp_cost(self.entry)
+        c["coll_bytes"] = sum(c["coll"].values())
+        return c
+
+
+def analyze_text(hlo_text: str) -> dict:
+    """Per-chip {flops, traffic, coll, coll_bytes} with trip counts."""
+    return Module(hlo_text).entry_cost()

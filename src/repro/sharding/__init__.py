@@ -1,0 +1,3 @@
+"""Logical-axis partitioning rules (DP/FSDP/TP/EP/SP)."""
+from repro.sharding.rules import (batch_spec, sharding_for, spec_for,
+                                  tree_shardings)

@@ -1,0 +1,102 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter/activation is annotated with a tuple of *logical* axis
+names; this module maps logical axes to physical mesh axes. The same model
+code runs on the single-pod ``(data, model)`` mesh, the multi-pod
+``(pod, data, model)`` mesh, or one CPU device (all rules become None).
+
+Physical strategy:
+  * FSDP/ZeRO-3: parameter "embed"-like axes shard over ``data`` (and
+    ``pod`` composes with ``data`` for batch / FSDP at multi-pod scale).
+  * TP: head / mlp / vocab / expert axes shard over ``model``.
+  * SP (decode): the KV-cache sequence axis shards over ``model`` —
+    consumed by the split-KV merge path (``serving/decode.py``).
+
+A rule is skipped (axis replicated) when the dim is not divisible by the
+mesh axis size — e.g. qwen2's 14 heads or yi's 56 heads on a 16-way model
+axis; the MLP/vocab axes still shard (noted per-arch in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred physical mesh axes, tried in order.
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod+data", "data"),
+    "embed": ("data",),          # FSDP
+    "vocab": ("model",),
+    "embed_vocab": (),           # embedding table vocab axis: replicated so
+                                 # the token gather stays device-local
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),       # EP
+    "expert_mlp": (),
+    "kv_seq": ("model",),        # SP decode (split-KV + merge kernel)
+    "seq": (),
+    "layers": (),
+    "head_dim": (),
+    "lru": ("model",),
+    "conv": (),
+    "stack": (),
+}
+
+
+def _resolve(logical: str | None, dim: int, mesh: Mesh):
+    if logical is None:
+        return None
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for cand in RULES.get(logical, ()):
+        if cand == "pod+data":
+            names = tuple(n for n in ("pod", "data") if n in axis_sizes)
+            if not names:
+                continue
+            total = int(np.prod([axis_sizes[n] for n in names]))
+            if dim % total == 0:
+                return names if len(names) > 1 else names[0]
+        elif cand in axis_sizes and dim % axis_sizes[cand] == 0:
+            return cand
+    return None
+
+
+def spec_for(logical_axes: tuple, shape: tuple, mesh: Mesh) -> P:
+    """PartitionSpec for an array with the given logical axes and shape."""
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used: set[str] = set()
+    out = []
+    for logical, dim in zip(logical_axes, shape):
+        r = _resolve(logical, dim, mesh)
+        flat = r if isinstance(r, tuple) else ((r,) if r else ())
+        if any(a in used for a in flat):
+            r = None                      # a mesh axis can appear only once
+        used.update(flat)
+        out.append(r)
+    return P(*out)
+
+
+def sharding_for(logical_axes: tuple, shape: tuple, mesh: Mesh):
+    return NamedSharding(mesh, spec_for(logical_axes, shape, mesh))
+
+
+def tree_shardings(params, axes_tree, mesh: Mesh):
+    """NamedSharding tree matching ``params`` from a logical-axes tree.
+
+    Works on both concrete arrays and ShapeDtypeStruct stand-ins. The axes
+    tree has the same dict structure as ``params`` with tuple-of-logical-
+    axis-names leaves (tuples are themselves pytrees, hence flatten_up_to).
+    """
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_ax = treedef.flatten_up_to(axes_tree)
+    flat_s = [sharding_for(ax, p.shape, mesh)
+              for p, ax in zip(flat_p, flat_ax)]
+    return jax.tree.unflatten(treedef, flat_s)
+
+
+def batch_spec(mesh: Mesh, *trailing) -> P:
+    """PartitionSpec for [batch, ...] activations: batch over pod+data."""
+    names = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+    lead = names if len(names) > 1 else (names[0] if names else None)
+    return P(lead, *trailing)

@@ -1,0 +1,100 @@
+"""Fault tolerance: restart-on-failure, straggler watchdog, heartbeats,
+failure injection for tests.
+
+The control plane is deliberately simple and file-based (what actually
+survives at cluster scale): a committed-checkpoint directory is the only
+source of truth; any worker can die at any point and the relaunched job
+reconstructs (params, optimizer, data cursor) from the last commit and
+re-shards to the CURRENT mesh (elastic scaling — see
+``checkpoint.Checkpointer.restore``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+
+class FailureInjector:
+    """Deterministic fault injection for tests/drills: raises at a chosen
+    step, once."""
+
+    def __init__(self, fail_at_step: int | None = None):
+        self.fail_at_step = fail_at_step
+        self.fired = False
+
+    def maybe_fail(self, step: int):
+        if (self.fail_at_step is not None and not self.fired
+                and step == self.fail_at_step):
+            self.fired = True
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Flags steps slower than `threshold` x the running median.
+
+    At scale the mitigation hooks here are: re-shard around the slow host
+    (elastic restart) or skip its contribution for the step; single-host we
+    record + report, and the training loop can trigger a checkpoint+restart
+    when `consecutive_limit` is hit.
+    """
+    threshold: float = 3.0
+    consecutive_limit: int = 5
+    history: list = dataclasses.field(default_factory=list)
+    consecutive: int = 0
+    flagged_steps: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        self.history.append(seconds)
+        window = sorted(self.history[-64:])
+        median = window[len(window) // 2]
+        slow = len(self.history) > 4 and seconds > self.threshold * median
+        if slow:
+            self.flagged_steps.append(step)
+            self.consecutive += 1
+        else:
+            self.consecutive = 0
+        return slow
+
+    @property
+    def should_restart(self) -> bool:
+        return self.consecutive >= self.consecutive_limit
+
+
+class Heartbeat:
+    """Liveness file a cluster supervisor would watch."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def beat(self, step: int):
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "t": time.time()}, f)
+        os.replace(tmp, self.path)
+
+    def last(self):
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+
+
+def run_with_restarts(make_fn, *, max_restarts: int = 3, on_restart=None):
+    """Run ``make_fn()`` (a full training run that may raise); on failure,
+    call it again — it is expected to resume from the latest committed
+    checkpoint. Returns the run's result."""
+    attempt = 0
+    while True:
+        try:
+            return make_fn()
+        except Exception as e:  # noqa: BLE001 — any worker death
+            attempt += 1
+            if attempt > max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(attempt, e)

@@ -1,0 +1,69 @@
+"""flash_attention (custom recomputing VJP) vs plain softmax autodiff."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+B, HQ, HKV, DH = 2, 4, 2, 32
+
+
+def plain(q, k, v, causal=True, window=None):
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    s = jnp.einsum("bqhgd,bkhd->bhgqk",
+                   q.reshape(b, sq, hkv, g, dh) * dh ** -0.5, k)
+    qp, kp = jnp.arange(sq), jnp.arange(skv)
+    if causal:
+        mask = kp[None] <= qp[:, None]
+        if window:
+            mask &= (qp[:, None] - kp[None]) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)
+
+
+@pytest.mark.parametrize("causal,window,chunk,s", [
+    (True, None, 16, 64), (True, 24, 16, 64), (False, None, 32, 96),
+    (True, None, 64, 100),   # padded final chunk
+])
+def test_forward_and_grads(causal, window, chunk, s):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, s, HQ, DH))
+    k = jax.random.normal(ks[1], (B, s, HKV, DH))
+    v = jax.random.normal(ks[2], (B, s, HKV, DH))
+    got = L.flash_attention(q, k, v, causal, window, chunk, not causal)
+    want = plain(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    f = lambda *a: (L.flash_attention(*a, causal, window, chunk,
+                                      not causal) ** 2).sum()
+    g = lambda *a: (plain(*a, causal, window) ** 2).sum()
+    g1 = jax.grad(f, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(g, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_no_probability_residuals():
+    """The custom VJP must not stack per-chunk probabilities: the jaxpr of
+    the VJP should contain no [n_chunks, ..., S, chunk]-sized constants."""
+    s, chunk = 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, s, 2, 16))
+    k = jax.random.normal(ks[1], (1, s, 1, 16))
+    v = jax.random.normal(ks[2], (1, s, 1, 16))
+    f = lambda q, k, v: L.flash_attention(q, k, v, True, None, chunk,
+                                          False).sum()
+    jaxpr = jax.make_jaxpr(jax.grad(f, (0, 1, 2)))(q, k, v)
+    stacked = s // chunk * s * chunk  # elements of a stacked p residual
+    for eqn_var in jaxpr.jaxpr.eqns:
+        for out in eqn_var.outvars:
+            shape = getattr(out.aval, "shape", ())
+            assert np.prod(shape, initial=1) < stacked * 2, (
+                f"found stacked residual-sized buffer {shape}")

@@ -1,0 +1,142 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_decode as fd, fused_add_rmsnorm as rms,
+                           merge_attn_states as mrg, ops, ref,
+                           silu_and_mul as silu)
+
+F32, BF16 = jnp.float32, jnp.bfloat16
+
+
+def tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == BF16 \
+        else dict(rtol=1e-5, atol=1e-4)
+
+
+def allclose(a, b, dtype):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), **tol(dtype))
+
+
+SILU_SHAPES = [(1, 128), (16, 4096), (33, 5120), (7, 256), (128, 11008)]
+
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+@pytest.mark.parametrize("shape", SILU_SHAPES)
+@pytest.mark.parametrize("variant", [silu.BASELINE, silu.OPTIMIZED,
+                                     silu.SiluMulVariant(block_rows=8,
+                                                         fast_exp=True)])
+def test_silu_and_mul(shape, dtype, variant):
+    x = jax.random.normal(jax.random.PRNGKey(0), (shape[0], 2 * shape[1]),
+                          dtype) * 3
+    got = silu.silu_and_mul(x, variant, interpret=True)
+    allclose(got, ref.silu_and_mul(x), dtype)
+
+
+RMS_SHAPES = [(1, 128), (256, 4096), (33, 5120), (512, 14336)]
+
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+@pytest.mark.parametrize("shape", RMS_SHAPES)
+@pytest.mark.parametrize("variant", [rms.BASELINE, rms.OPTIMIZED])
+def test_fused_add_rmsnorm(shape, dtype, variant):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], shape, dtype)
+    r = jax.random.normal(ks[1], shape, dtype)
+    w = (1 + 0.1 * jax.random.normal(ks[2], (shape[1],))).astype(dtype)
+    y, ro = rms.fused_add_rmsnorm(x, r, w, variant=variant, interpret=True)
+    wy, wr = ref.fused_add_rmsnorm(x, r, w)
+    allclose(y, wy, dtype)
+    allclose(ro, wr, dtype)
+
+
+MERGE_SHAPES = [(17, 1, 128), (512, 32, 256), (100, 7, 128), (512, 64, 128)]
+
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+@pytest.mark.parametrize("shape", MERGE_SHAPES)
+@pytest.mark.parametrize("variant", [mrg.BASELINE, mrg.OPTIMIZED,
+                                     mrg.MergeVariant(fuse_s_out=False)])
+def test_merge_attn_states(shape, dtype, variant):
+    s, h, d = shape
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    va = jax.random.normal(ks[0], (s, h, d), dtype)
+    vb = jax.random.normal(ks[1], (s, h, d), dtype)
+    sa = jax.random.normal(ks[2], (s, h)) * 8
+    sb = jax.random.normal(ks[3], (s, h)) * 8
+    sb = jnp.where(jax.random.uniform(ks[4], (s, h)) < 0.1, -jnp.inf, sb)
+    vo, so = mrg.merge_attn_states_lse(va, sa, vb, sb, variant,
+                                       interpret=True)
+    wv, ws = ref.merge_attn_states_lse(va, sa, vb, sb)
+    allclose(vo, wv, dtype)
+    np.testing.assert_allclose(np.asarray(so), np.asarray(ws),
+                               rtol=1e-5, atol=1e-5)
+
+
+FLASH_SHAPES = [  # (b, hq, hkv, dh, s)
+    (1, 8, 8, 64, 257), (3, 14, 2, 128, 1000), (2, 16, 4, 64, 2048)]
+
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+@pytest.mark.parametrize("shape", FLASH_SHAPES)
+@pytest.mark.parametrize("variant", [fd.BASELINE, fd.OPTIMIZED])
+def test_flash_decode(shape, dtype, variant):
+    b, hq, hkv, dh, s = shape
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(ks[0], (b, hq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), dtype)
+    kv_len = jax.random.randint(ks[3], (b,), 1, s + 1)
+    got = fd.flash_decode_attention(q, k, v, kv_len=kv_len, variant=variant,
+                                    interpret=True)
+    want = ref.flash_decode_attention(q, k, v, kv_len=kv_len)
+    allclose(got, want, dtype)
+
+
+def test_split_kv_merge_identity():
+    """Distributed split-KV invariant: merging per-shard partial states with
+    Kernel 1 equals attention over the whole cache."""
+    b, hq, hkv, dh, s = 2, 8, 2, 64, 512
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = jax.random.normal(ks[0], (b, hq, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    kv_len = jnp.array([400, 150])
+    want = ref.flash_decode_attention(q, k, v, kv_len=kv_len)
+    half = s // 2
+    l1 = jnp.minimum(kv_len, half)
+    l2 = jnp.maximum(kv_len - half, 0)
+    o1 = ref.flash_decode_attention(q, k[:, :half], v[:, :half], kv_len=l1)
+    s1 = ref.flash_decode_lse(q, k[:, :half], kv_len=l1)
+    o2 = ref.flash_decode_attention(q, k[:, half:], v[:, half:], kv_len=l2)
+    s2 = ref.flash_decode_lse(q, k[:, half:], kv_len=l2)
+    o2 = jnp.where(jnp.isneginf(s2)[..., None], 0.0, o2)
+    om, sm = ref.merge_attn_states_lse(o1, s1, o2, s2)
+    np.testing.assert_allclose(np.asarray(om), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ops_dispatch_and_reintegration():
+    """ops.* dispatches to ref on CPU; set_variants installs tuned kernels
+    (the paper's post-processing)."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 512))
+    np.testing.assert_allclose(np.asarray(ops.silu_and_mul(x)),
+                               np.asarray(ref.silu_and_mul(x)), rtol=1e-6)
+    old = ops.get_variant("silu_and_mul")
+    try:
+        tuned = silu.SiluMulVariant(name="tuned", block_rows=64)
+        ops.set_variants(silu_and_mul=tuned)
+        assert ops.get_variant("silu_and_mul").name == "tuned"
+        y = ops.silu_and_mul(x, impl="pallas")
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.silu_and_mul(x)),
+                                   rtol=1e-5, atol=1e-5)
+    finally:
+        ops.set_variants(silu_and_mul=old)
+    with pytest.raises(KeyError):
+        ops.set_variants(nonexistent_kernel=None)

@@ -1,0 +1,137 @@
+"""Hypothesis property tests on the system's mathematical invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.training import compression
+
+jax.config.update("jax_enable_x64", False)
+
+dims = st.integers(min_value=1, max_value=6)
+small_f = st.floats(min_value=-8, max_value=8, allow_nan=False,
+                    width=32)
+
+
+def arr(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), rows=st.integers(1, 9),
+       d=st.sampled_from([32, 128, 200]))
+def test_merge_commutative(seed, rows, d):
+    """merge(A, B) == merge(B, A) — LSE merge is symmetric."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    va, vb = (jax.random.normal(k, (rows, d)) for k in ks[:2])
+    sa, sb = (jax.random.normal(k, (rows,)) * 6 for k in ks[2:])
+    v1, s1 = ref.merge_attn_states_lse(va, sa, vb, sb)
+    v2, s2 = ref.merge_attn_states_lse(vb, sb, va, sa)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), rows=st.integers(1, 6),
+       d=st.sampled_from([32, 64]))
+def test_merge_associative(seed, rows, d):
+    """merge(merge(A,B),C) == merge(A,merge(B,C)) — the property that makes
+    tree-reduction of split-KV partials valid at any fan-in."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    v = [jax.random.normal(k, (rows, d)) for k in ks[:3]]
+    s = [jax.random.normal(k, (rows,)) * 6 for k in ks[3:]]
+    vab, sab = ref.merge_attn_states_lse(v[0], s[0], v[1], s[1])
+    l_, sl = ref.merge_attn_states_lse(vab, sab, v[2], s[2])
+    vbc, sbc = ref.merge_attn_states_lse(v[1], s[1], v[2], s[2])
+    r_, sr = ref.merge_attn_states_lse(v[0], s[0], vbc, sbc)
+    np.testing.assert_allclose(np.asarray(l_), np.asarray(r_),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sl), np.asarray(sr),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), rows=st.integers(1, 8),
+       d=st.sampled_from([64, 256]), shift=small_f)
+def test_merge_shift_invariant(seed, rows, d, shift):
+    """V_out is invariant to a common shift of both scores (softmax
+    normalization); S_out shifts by exactly that amount."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    va, vb = (jax.random.normal(k, (rows, d)) for k in ks[:2])
+    sa, sb = (jax.random.normal(k, (rows,)) * 4 for k in ks[2:])
+    v1, s1 = ref.merge_attn_states_lse(va, sa, vb, sb)
+    v2, s2 = ref.merge_attn_states_lse(va, sa + shift, vb, sb + shift)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2 - s1),
+                               np.full((rows,), shift), rtol=2e-4,
+                               atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), rows=st.integers(1, 8),
+       d=st.sampled_from([128, 512]), c=st.floats(0.125, 8.0, width=32))
+def test_rmsnorm_scale_invariance(seed, rows, d, c):
+    """RMSNorm(c*x, w) == RMSNorm(x, w) up to eps — scale invariance."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (rows, d))
+    r = jax.random.normal(ks[1], (rows, d))
+    w = 1 + 0.1 * jax.random.normal(ks[2], (d,))
+    y1, _ = ref.fused_add_rmsnorm(x, r, w, eps=1e-12)
+    y2, _ = ref.fused_add_rmsnorm(c * x, c * r, w, eps=1e-12)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       n=st.integers(1, 2000))
+def test_compression_roundtrip_bounded(seed, n):
+    """Quantize-dequantize error is bounded by scale/2 per element, and
+    error feedback keeps the LONG-RUN mean error near zero."""
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
+    q, s, n_ = compression.quantize(jnp.asarray(g))
+    deq = np.asarray(compression.dequantize(q, s, n_, (n,)))
+    scales = np.repeat(np.asarray(s)[:, 0], compression.BLOCK)[:n]
+    assert np.all(np.abs(deq - g) <= scales / 2 + 1e-7)
+
+
+def test_compression_error_feedback_accumulates():
+    grads = {"w": jnp.full((512,), 0.004)}
+    err = None
+    total = jnp.zeros((512,))
+    for _ in range(8):
+        out, err = compression.compress_grads(grads, err)
+        total = total + out["w"]
+    # with error feedback, the sum of transmitted grads tracks the true sum
+    np.testing.assert_allclose(np.asarray(total),
+                               np.full((512,), 8 * 0.004), rtol=0.05)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), b=st.integers(1, 3),
+       s=st.sampled_from([64, 100]),
+       hq=st.sampled_from([2, 4]), hkv=st.sampled_from([1, 2]))
+def test_flash_attention_matches_softmax(seed, b, s, hq, hkv):
+    """flash_attention (custom-VJP scan) == plain softmax attention."""
+    from repro.models import layers as L
+    dh = 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    got = L.flash_attention(q, k, v, True, None, 32, False)
+    g = hq // hkv
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk",
+                    q.reshape(b, s, hkv, g, dh) * dh ** -0.5, k)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, -1)
+    want = jnp.einsum("bhgqk,bkhd->bhgqd", p, v) \
+        .transpose(0, 3, 1, 2, 4).reshape(b, s, hq, dh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

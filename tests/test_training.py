@@ -1,0 +1,183 @@
+"""Training substrate: optimizer, schedules, microbatching equivalence,
+checkpoint atomicity/restore, fault-tolerant restart, data determinism."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import Pipeline, _batch_np
+from repro.models import registry
+from repro.training import optimizer as opt
+from repro.training.checkpoint import Checkpointer
+from repro.training.fault_tolerance import (FailureInjector,
+                                            StragglerWatchdog,
+                                            run_with_restarts)
+from repro.training.train_step import TrainConfig, init_state, make_train_step
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    cfg = opt.AdamWConfig(lr=0.2, weight_decay=0.0, warmup_steps=0,
+                          total_steps=200, min_lr_frac=1.0)
+    for _ in range(150):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = opt.update(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_clip_and_schedule():
+    g = {"w": jnp.full((10,), 100.0)}
+    clipped, gn = opt.clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(100.0 * np.sqrt(10), rel=1e-5)
+    assert float(jnp.linalg.norm(clipped["w"])) == pytest.approx(1.0, 1e-4)
+    cfg = opt.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(opt.schedule(cfg, 5)) == pytest.approx(5e-4)
+    assert float(opt.schedule(cfg, 10)) == pytest.approx(1e-3)
+    assert float(opt.schedule(cfg, 100)) == pytest.approx(
+        1e-3 * cfg.min_lr_frac, rel=1e-3)
+
+
+def test_microbatching_matches_full_batch():
+    """Grad accumulation over M microbatches == single big batch."""
+    cfg = configs.smoke("qwen2-0.5b")
+    params, _ = registry.init(cfg, jax.random.PRNGKey(0))
+    batch = registry.make_batch(cfg, 8, 16, jax.random.PRNGKey(1))
+    outs = {}
+    for m in (1, 4):
+        tcfg = TrainConfig(microbatches=m)
+        state = init_state(cfg, tcfg, params)
+        step = make_train_step(cfg, tcfg)
+        new_p, _, metrics = step(params, state, batch)
+        outs[m] = (metrics["loss"], new_p)
+    np.testing.assert_allclose(float(outs[1][0]), float(outs[4][0]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(outs[1][1]), jax.tree.leaves(outs[4][1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_compressed_training_still_learns():
+    cfg = configs.smoke("qwen2-0.5b")
+    params, _ = registry.init(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainConfig(compress_grads=True,
+                       adamw=opt.AdamWConfig(lr=1e-3, warmup_steps=0,
+                                             total_steps=30))
+    state = init_state(cfg, tcfg, params)
+    assert "err_fb" in state
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = registry.make_batch(cfg, 4, 16, jax.random.PRNGKey(1))
+    losses = []
+    for _ in range(12):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]     # memorizes the fixed batch
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 3))}}
+    for step in (1, 2, 3):
+        ck.save(step, tree, extra={"pipeline": {"seed": 7, "step": step}},
+                blocking=True)
+    assert ck.committed_steps() == [2, 3]            # gc keeps last 2
+    restored, extra, step = ck.restore(tree)
+    assert step == 3 and extra["pipeline"]["step"] == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A .tmp directory (simulated crash mid-save) is never restored."""
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.ones(3)}
+    ck.save(1, tree, blocking=True)
+    os.makedirs(tmp_path / "step_00000002.tmp")      # crashed save
+    assert ck.latest_step() == 1
+    _, _, step = ck.restore(tree)
+    assert step == 1
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, {"w": jnp.zeros(10)}, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_failure_injection_and_restart_resumes_exactly(tmp_path):
+    from repro.launch.train import run
+    out = run(arch="qwen2-0.5b", steps=14, batch=2, seq=16,
+              ckpt_dir=str(tmp_path), fail_at=8, verbose=False)
+    assert len(out["losses"]) >= 6                  # resumed and finished
+    # deterministic pipeline -> the rerun of step 5..13 saw the same data
+    out2 = run(arch="qwen2-0.5b", steps=14, batch=2, seq=16,
+               ckpt_dir=str(tmp_path) + "_clean", fail_at=None,
+               verbose=False)
+    np.testing.assert_allclose(out["losses"][-1], out2["losses"][-1],
+                               rtol=1e-4)
+
+
+def test_run_with_restarts_gives_up():
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(always_fails, max_restarts=2)
+    assert len(calls) == 3
+
+
+def test_straggler_watchdog():
+    w = StragglerWatchdog(threshold=3.0, consecutive_limit=2)
+    for i in range(10):
+        assert not w.observe(i, 0.1)
+    assert w.observe(10, 1.0)
+    assert not w.should_restart
+    w.observe(11, 1.0)
+    assert w.should_restart
+    assert w.flagged_steps == [10, 11]
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_determinism_and_cursor():
+    cfg = configs.smoke("qwen2-0.5b")
+    p1 = Pipeline(cfg, 4, 16, seed=3)
+    batches = [p1.next() for _ in range(4)]
+    state = p1.state_dict()
+    assert state["step"] == 4
+    p1.close()
+    # restart mid-stream: batch 4 onward must match a fresh run's batch 4+
+    p2 = Pipeline.restore(cfg, 4, 16, state)
+    nxt = p2.next()
+    p2.close()
+    want = _batch_np(cfg, 4, 16, 3, 4)
+    np.testing.assert_array_equal(np.asarray(nxt["tokens"]), want["tokens"])
+    # and differs from batch 3
+    assert not np.array_equal(np.asarray(nxt["tokens"]),
+                              np.asarray(batches[3]["tokens"]))
+
+
+def test_pipeline_sharding_partitions_stream():
+    cfg = configs.smoke("qwen2-0.5b")
+    a = _batch_np(cfg, 8, 16, 0, 0, shard=0, n_shards=2)
+    b = _batch_np(cfg, 8, 16, 0, 0, shard=1, n_shards=2)
+    assert a["tokens"].shape == (4, 16)
+    assert not np.array_equal(a["tokens"], b["tokens"])
