@@ -13,6 +13,7 @@ Pallas vs the jnp oracles.
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -20,6 +21,7 @@ import os
 import numpy as np
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
+BENCH_JSON = os.path.join(ART, "bench.json")
 
 
 def _hifi():
@@ -158,19 +160,90 @@ def serving_bench(csv=True):
     return {"tokens": toks, "seconds": dt}
 
 
-def main() -> None:
+def bench_json(results=None, *, strategy="greedy", rounds: int = 5,
+               path: str = BENCH_JSON) -> dict:
+    """Machine-readable perf snapshot for cross-PR trajectory tracking:
+    per-kernel baseline/optimized latency, speedup, and the evaluation
+    cache hit-rate of each search (from ``Log.meta``)."""
+    from repro.core import SPACES, TestingAgent, registered_kernels
+    from repro.search import EvalCache, optimize_all
+    if results is None:
+        results = optimize_all(rounds=rounds, strategy=strategy,
+                               kernels=registered_kernels(),
+                               cache=EvalCache())
+    tester = TestingAgent()
+    kernels = []
+    for name, log in results.items():
+        space = SPACES[name]
+        tests = tester.generate_tests(space)
+        base = _eval(space, space.baseline, tests)
+        best = log.best()
+        opt = _eval(space, best.code, tests)
+        cache = log.meta.get("cache", {})
+        total = cache.get("hits", 0) + cache.get("misses", 0)
+        kernels.append({
+            "kernel": name,
+            "strategy": log.meta.get("strategy", "greedy"),
+            "baseline_us": base,
+            "optimized_us": opt,
+            "speedup": base / opt,
+            "correct": bool(best.correct),
+            "cache_hits": cache.get("hits", 0),
+            "cache_misses": cache.get("misses", 0),
+            "cache_hit_rate": cache.get("hits", 0) / total if total else 0.0,
+            "variant": best.code.describe(),
+        })
+    geo = float(np.exp(np.mean([np.log(k["speedup"]) for k in kernels])))
+    payload = {"kernels": kernels, "geomean_speedup": geo}
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    print(f"# bench json -> {path} (geomean {geo:.2f}x)")
+    return payload
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", action="store_true",
+                        help="also write benchmarks/artifacts/bench.json "
+                             "(per-kernel latency, speedup, cache hit-rate)")
+    parser.add_argument("--strategy", default="greedy",
+                        choices=("greedy", "beam", "population"),
+                        help="search strategy for the optimization runs")
+    parser.add_argument("--rounds", type=int, default=5)
+    parser.add_argument("--kernels", default=None,
+                        help="comma-separated kernel names, or 'all' for "
+                             "every registered kernel (default: the paper's "
+                             "three; flash_decode's interpret-mode "
+                             "validation adds minutes per genome)")
+    args = parser.parse_args(argv)
+
     os.makedirs(ART, exist_ok=True)
-    from repro.core import optimize_all
-    results = optimize_all(rounds=5)
-    t2 = table2_main(results)
-    t3 = table3_ablation(results)
-    t4 = table4_shapes(results)
+    from repro.core import optimize_all, registered_kernels
+    from repro.search import EvalCache
+    paper = ("merge_attn_states_lse", "fused_add_rmsnorm", "silu_and_mul")
+    if args.kernels == "all":
+        kernels = registered_kernels()
+    elif args.kernels:
+        kernels = tuple(args.kernels.split(","))
+    else:
+        kernels = paper
+    results = optimize_all(rounds=args.rounds, strategy=args.strategy,
+                           kernels=kernels, cache=EvalCache())
+    paper_three = {k: v for k, v in results.items() if k in paper}
+    # guard the falsy-empty-dict case: tableX(None-or-empty) would silently
+    # re-run three fresh 5-round optimizations, ignoring the CLI flags
+    t2 = table2_main(paper_three) if paper_three else []
+    t3 = table3_ablation(paper_three) if paper_three else []
+    t4 = table4_shapes(paper_three) if paper_three else []
     roofline_table()
     sv = serving_bench()
     with open(os.path.join(ART, "paper_tables.json"), "w") as f:
         json.dump({"table2": t2, "table3": t3, "table4": t4,
                    "serving": sv}, f, indent=2, default=str)
     print(f"# artifacts -> {ART}/paper_tables.json")
+    if args.json:
+        bench_json(results)
 
 
 if __name__ == "__main__":

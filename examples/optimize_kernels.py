@@ -1,16 +1,24 @@
-"""Reproduce the paper end-to-end: optimize all three SGLang kernels with
-the multi-agent system, compare with the single-agent baseline (Table 3),
-and print the per-round optimization trajectories (the case-study data
-behind the paper's §5.3).
+"""Reproduce the paper end-to-end: optimize the SGLang kernels with the
+multi-agent system, compare with the single-agent baseline (Table 3), and
+print the per-round optimization trajectories (the case-study data behind
+the paper's §5.3) — then go beyond Algorithm 1 with the pluggable search
+strategies (beam / population) sharing one memoized evaluation cache.
 
     PYTHONPATH=src python examples/optimize_kernels.py
 """
 import numpy as np
 
-from repro.core import (SPACES, ProfilingAgent, TestingAgent, optimize_all,
+from repro.core import (SPACES, ProfilingAgent, TestingAgent,
                         optimize_single_agent, reintegrate)
+from repro.search import BeamSearch, EvalCache, SearchOrchestrator
 
-results = optimize_all(rounds=5)
+# One orchestrator = one evaluation cache: every genome any strategy
+# visits is validated/profiled at most once, process-wide.
+cache = EvalCache()
+orch = SearchOrchestrator(cache=cache)
+kernels = ("merge_attn_states_lse", "fused_add_rmsnorm", "silu_and_mul")
+
+results = {k: orch.search(k, strategy="greedy", rounds=5) for k in kernels}
 hifi = ProfilingAgent(reps=10**6)
 tester = TestingAgent()
 
@@ -34,6 +42,17 @@ for name, log in results.items():
     print(f"=== trajectory: {name} ===")
     print(log.table())
     print()
+
+# Beam search re-walks the greedy path through the cache (hits) and spends
+# its width on the moves Algorithm 1 never tries.
+print("=== beam search (width=4), sharing the evaluation cache ===")
+for name in kernels:
+    beam = orch.search(name, strategy=BeamSearch(width=4), rounds=5)
+    best = beam.best()
+    c = beam.meta["cache"]
+    print(f"{name:<24} best {best.perf.geomean_latency_us:>8.2f}us  "
+          f"genomes={c['misses']} cache_hits={c['hits']}")
+print(f"cache: {cache.stats()}\n")
 
 reintegrate(results)
 print("tuned variants reintegrated into the serving/training framework.")

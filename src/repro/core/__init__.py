@@ -1,17 +1,25 @@
 """Astra core — the paper's contribution: a multi-agent system that
 optimizes production kernels through iterative generation, testing,
-profiling, and planning (Algorithm 1)."""
+profiling, and planning (Algorithm 1).
+
+The search machinery itself (strategies, evaluation cache, orchestrator)
+lives in ``repro.search``; this package hosts the four agents, the
+planning policy, the cost model, and the back-compat entry points.
+"""
 
 from repro.core.agents import (CodingAgent, PlanningAgent, ProfilingAgent,
                                Suggestion, TestingAgent)
 from repro.core.loop import optimize, optimize_all, reintegrate
 from repro.core.oplog import Log, LogEntry
 from repro.core.single_agent import optimize_single_agent
-from repro.core.variants import SPACES, KernelSpace, Knob, make_inputs
+from repro.core.variants import (SPACES, KernelSpace, Knob, TestCase,
+                                 get_space, make_inputs,
+                                 register_kernel_space, registered_kernels)
 
 __all__ = [
     "CodingAgent", "PlanningAgent", "ProfilingAgent", "TestingAgent",
     "Suggestion", "optimize", "optimize_all", "reintegrate",
     "Log", "LogEntry", "optimize_single_agent",
-    "SPACES", "KernelSpace", "Knob", "make_inputs",
+    "SPACES", "KernelSpace", "Knob", "TestCase", "get_space", "make_inputs",
+    "register_kernel_space", "registered_kernels",
 ]

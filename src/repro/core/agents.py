@@ -80,6 +80,15 @@ class TestingAgent:
 
     def validate(self, space: KernelSpace, variant,
                  tests: Sequence[TestCase]) -> tuple[bool, float]:
+        """Check ``variant`` against the oracle over T.
+
+        Tolerance is the standard mixed bound ``err <= atol + rtol*|want|``
+        (NOT ``rel <= rtol + atol``, which conflates relative and absolute
+        error and mis-handles near-zero oracle values). Non-finite oracle
+        entries (e.g. -inf empty partitions) must match exactly. The
+        returned ``max_err`` is tolerance-normalized: ``err / (atol +
+        rtol*|want|)``, so <= 1.0 means within epsilon.
+        """
         worst = 0.0
         for t in tests:
             rtol, atol = _tolerance(t.shape_info["dtype"])
@@ -91,11 +100,13 @@ class TestingAgent:
                 g = np.asarray(g, np.float32)
                 w = np.asarray(w, np.float32)
                 finite = np.isfinite(w)
-                err = np.abs(g - w)
-                denom = np.maximum(np.abs(w), 1.0)
-                rel = np.where(finite, err / denom, g != w)
-                worst = max(worst, float(np.max(rel)))
-                if not np.all(rel <= rtol + atol):
+                with np.errstate(invalid="ignore", divide="ignore"):
+                    err = np.abs(g - w)
+                    bound = atol + rtol * np.abs(w)
+                    norm = np.where(finite, err / bound,
+                                    np.where(g == w, 0.0, 2.0))
+                worst = max(worst, float(np.max(norm)))
+                if not np.all(norm <= 1.0):
                     return False, worst
         return True, worst
 
@@ -177,6 +188,17 @@ class PlanningAgent:
     def suggest(self, space: KernelSpace, variant, passed: bool,
                 profile: Profile, history: list) -> Suggestion:
         return self.backend.plan(space, variant, passed, profile, history)
+
+    def suggest_many(self, space: KernelSpace, variant, passed: bool,
+                     profile: Profile, history: list,
+                     k: int = 4) -> list[Suggestion]:
+        """Up to ``k`` distinct proposals, best-first — what multi-candidate
+        strategies (beam search) consume. Falls back to the single ``plan``
+        for backends that only speak Algorithm 1."""
+        if hasattr(self.backend, "plan_many"):
+            return self.backend.plan_many(space, variant, passed, profile,
+                                          history, k=k)
+        return [self.backend.plan(space, variant, passed, profile, history)]
 
 
 class CodingAgent:

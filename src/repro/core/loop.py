@@ -1,4 +1,4 @@
-"""Algorithm 1 — Multi-Agent CUDA(-to-Pallas) Optimization, verbatim.
+"""Algorithm 1 — Multi-Agent CUDA(-to-Pallas) Optimization.
 
 The loop wires the four agents exactly as the paper's pseudocode:
 
@@ -13,73 +13,38 @@ The loop wires the four agents exactly as the paper's pseudocode:
         Log.append((r, S_new, pass_new, perf_new))
         S_prev, pass_prev, perf_prev <- S_new, pass_new, perf_new
 
-The optimized kernel reported in the paper's tables is the best *correct*
-entry of the log (``Log.best()``); ``reintegrate`` installs it into the
-framework via ``ops.set_variants`` (the paper's post-processing step).
+The implementation now lives in the pluggable search subsystem
+(``repro.search``): ``optimize(strategy="greedy")`` is this exact loop
+(``GreedyChain``), and ``"beam"`` / ``"population"`` explore many
+candidates per round through a memoized evaluation cache. This module is
+the back-compat façade — it lazily delegates so that importing
+``repro.core`` never drags in ``repro.search`` at module-import time.
 """
 
 from __future__ import annotations
 
-from repro.core.agents import (CodingAgent, PlanningAgent, ProfilingAgent,
-                               TestingAgent)
-from repro.core.oplog import Log, LogEntry
-from repro.core.variants import SPACES, KernelSpace
+from repro.core.oplog import Log
+from repro.core.variants import KernelSpace
 
 
-def optimize(kernel: str | KernelSpace, *, rounds: int = 5,
-             testing: TestingAgent | None = None,
-             profiling: ProfilingAgent | None = None,
-             planning: PlanningAgent | None = None,
-             coding: CodingAgent | None = None,
-             verbose: bool = False) -> Log:
-    """Run Algorithm 1 on one kernel. Returns the optimization Log."""
-    space = SPACES[kernel] if isinstance(kernel, str) else kernel
-    testing = testing or TestingAgent()
-    profiling = profiling or ProfilingAgent(reps=100)
-    planning = planning or PlanningAgent()
-    coding = coding or CodingAgent()
+def optimize(kernel: str | KernelSpace, **kwargs) -> Log:
+    """Run one search on one kernel (default: Algorithm 1's greedy chain).
 
-    # Initialization (Alg. 1 lines 1-7)
-    tests = testing.generate_tests(space)
-    s_prev = space.baseline
-    perf_prev = profiling.profile(space, s_prev, tests)
-    log = Log()
-    log.append(LogEntry(0, s_prev, True, perf_prev, rationale="baseline"))
-    pass_prev = True
-    history = [{"variant": s_prev, "passed": True, "profile": perf_prev,
-                "suggestion": None}]
+    Accepts the historical agent-override kwargs plus ``strategy=`` and
+    ``cache=`` — see ``repro.search.optimize`` for the full signature.
+    """
+    from repro.search.orchestrator import optimize as _optimize
+    return _optimize(kernel, **kwargs)
 
-    # Iterative optimization (lines 8-16)
-    for r in range(1, rounds + 1):
-        sugg = planning.suggest(space, s_prev, pass_prev, perf_prev, history)
-        s_new = coding.apply(space, s_prev, sugg)
-        pass_new, max_err = testing.validate(space, s_new, tests)
-        perf_new = profiling.profile(space, s_new, tests)
-        log.append(LogEntry(r, s_new, pass_new, perf_new,
-                            rationale=sugg.rationale, max_err=max_err))
-        history.append({"variant": s_new, "passed": pass_new,
-                        "profile": perf_new, "suggestion": sugg})
-        s_prev, pass_prev, perf_prev = s_new, pass_new, perf_new
-        if verbose:
-            print(f"[{space.name}] round {r}: {sugg.rationale}")
-            print(f"    -> {s_new.describe()}  "
-                  f"{'OK' if pass_new else 'FAIL'} "
-                  f"{perf_new.geomean_latency_us:.2f}us")
-    return log
+
+def optimize_all(**kwargs) -> dict[str, Log]:
+    """Optimize the paper's three kernels; returns {kernel: Log}."""
+    from repro.search.orchestrator import optimize_all as _optimize_all
+    return _optimize_all(**kwargs)
 
 
 def reintegrate(results: dict[str, Log]) -> None:
     """Post-processing (paper §3.2): install each kernel's best correct
     variant process-wide so the serving/training framework picks it up."""
-    from repro.kernels import ops
-    ops.set_variants(**{name: log.best().code
-                        for name, log in results.items()})
-
-
-def optimize_all(*, rounds: int = 5, verbose: bool = False,
-                 kernels: tuple[str, ...] = ("merge_attn_states_lse",
-                                             "fused_add_rmsnorm",
-                                             "silu_and_mul"),
-                 ) -> dict[str, Log]:
-    """Optimize the paper's three kernels; returns {kernel: Log}."""
-    return {k: optimize(k, rounds=rounds, verbose=verbose) for k in kernels}
+    from repro.search.orchestrator import reintegrate as _reintegrate
+    return _reintegrate(results)

@@ -34,6 +34,8 @@ class Log:
 
     def __init__(self) -> None:
         self.entries: list[LogEntry] = []
+        # search metadata: strategy name, cache hit counts, kernel, ...
+        self.meta: dict = {}
 
     def append(self, entry: LogEntry) -> None:
         self.entries.append(entry)
@@ -62,4 +64,5 @@ class Log:
         return "\n".join(lines)
 
     def to_json(self) -> str:
-        return json.dumps([e.row() for e in self.entries], indent=2)
+        payload = {"meta": self.meta, "entries": [e.row() for e in self.entries]}
+        return json.dumps(payload, indent=2, default=str)

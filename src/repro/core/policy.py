@@ -30,6 +30,43 @@ class PolicyBackend:
 
     def plan(self, space: KernelSpace, variant, passed: bool,
              profile: Profile, history: list) -> Suggestion:
+        # explore=False: Algorithm 1 holds position when the catalog is
+        # exhausted; exploratory resizes are beam-only breadth.
+        suggs = self.plan_many(space, variant, passed, profile, history,
+                               k=1, explore=False)
+        if suggs:
+            return suggs[0]
+        # Nothing left: hold position (no-op move on the first knob).
+        k = space.knobs[0]
+        return Suggestion(k.name, getattr(variant, k.name),
+                          "no profitable moves left; hold")
+
+    def plan_many(self, space: KernelSpace, variant, passed: bool,
+                  profile: Profile, history: list,
+                  k: int = 4, explore: bool = True) -> list[Suggestion]:
+        """Up to ``k`` distinct proposals, best-first.
+
+        Proposal #1 is exactly what ``plan`` would pick (the greedy chain's
+        move); the rest are the remaining catalog moves in term-priority
+        order, then (``explore=True``) exploratory tile resizes — the extra
+        breadth that multi-candidate strategies (beam search) spend their
+        width on.
+        """
+        out: list[Suggestion] = []
+        proposed: set = set()
+
+        def add(sug: Suggestion | None) -> None:
+            if sug is None or len(out) >= k:
+                return
+            move = (sug.knob, sug.value)
+            if move in proposed or move in banned:
+                return
+            if sug.value == getattr(variant, sug.knob):
+                return                  # no-op move
+            proposed.add(move)
+            out.append(sug)
+
+        banned = self._banned_moves(space, history)
         best = self._best(history)
         noise = 2.0 * profile.noise_scale
 
@@ -41,13 +78,13 @@ class PolicyBackend:
                 diff = self._diff(variant, best_var, space)
                 if diff is not None:
                     knob, val = diff
-                    return Suggestion(
+                    # a revert is never banned — it restores the best state
+                    banned = banned - {(knob.name, val)}
+                    add(Suggestion(
                         knob.name, val,
                         f"revert {knob.name}: round regressed "
                         f"({cur_lat:.1f}us vs best {best_lat:.1f}us)"
-                        + ("" if passed else " and FAILED tests"))
-
-        banned = self._banned_moves(space, history)
+                        + ("" if passed else " and FAILED tests")))
 
         # 2. Attack the dominant term, then fallbacks.
         order = (profile.dominant,) + _FALLBACK[profile.dominant]
@@ -55,14 +92,21 @@ class PolicyBackend:
             for knob in space.knobs:
                 if term not in knob.attacks:
                     continue
-                sug = self._move(space, variant, knob, profile)
-                if sug is not None and (knob.name, sug.value) not in banned:
-                    return sug
+                add(self._move(space, variant, knob, profile))
 
-        # 3. Nothing left: hold position (no-op move on the first knob).
-        k = space.knobs[0]
-        return Suggestion(k.name, getattr(variant, k.name),
-                          "no profitable moves left; hold")
+        # 3. Exploratory tile resizes (both directions) for extra beam width.
+        if not explore:
+            return out
+        for term in order:
+            for knob in space.knobs:
+                if knob.kind != "pow2" or term not in knob.attacks:
+                    continue
+                cur = getattr(variant, knob.name)
+                for val, why in ((cur * 2, "grow"), (cur // 2, "shrink")):
+                    if knob.lo <= val <= knob.hi:
+                        add(Suggestion(knob.name, val,
+                                       f"explore: {why} {knob.name} to {val}"))
+        return out
 
     # -- helpers -----------------------------------------------------------
 

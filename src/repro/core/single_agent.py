@@ -30,7 +30,7 @@ import dataclasses
 
 from repro.core.agents import ProfilingAgent, Suggestion, TestingAgent
 from repro.core.oplog import Log, LogEntry
-from repro.core.variants import SPACES, KernelSpace, make_inputs
+from repro.kernels.registry import KernelSpace, get_space, make_inputs
 
 # The single agent's quick-test dims: it grabs round numbers it has seen in
 # model cards — unrepresentative of the serving shapes the kernels actually
@@ -58,7 +58,7 @@ _CHECKLIST = ("use_reciprocal", "use_rsqrt", "fast_exp", "fuse_s_out",
 def optimize_single_agent(kernel: str | KernelSpace, *, rounds: int = 5,
                           verbose: bool = False) -> Log:
     """Run the single-agent loop. Returns a Log comparable to Alg. 1's."""
-    space = SPACES[kernel] if isinstance(kernel, str) else kernel
+    space = get_space(kernel) if isinstance(kernel, str) else kernel
 
     # The agent does its own test construction: one quick case.
     quick = [make_inputs(space.name, _QUICK_SHAPES[space.name], seed=7)]

@@ -1,233 +1,24 @@
-"""Kernel optimization spaces — the "code" the Astra agents manipulate.
+"""Back-compat shim — kernel optimization spaces live with their kernels.
 
-The paper's coding agent edits CUDA source. Our coding agent edits a
-*variant genome*: a frozen dataclass of transformation knobs that the
-kernel module compiles into a different Pallas lowering (tile geometry,
-pass structure, math lowering). Each knob corresponds to one of the
-transformation families the paper's LLM discovers (§5.3):
+The hand-maintained ``SPACES`` dict that used to be defined here is gone:
+each module under ``repro.kernels`` now declares its own ``KernelSpace``
+via the ``@register_kernel_space`` decorator (``repro.kernels.registry``),
+which keeps the "code" an Astra agent manipulates next to the kernel it
+describes and makes adding a kernel a one-file change.
 
-  loop-invariant hoisting  -> ``hoist``            (merge_attn_states)
-  reduction restructuring  -> ``two_pass``         (fused_add_rmsnorm)
-  vectorized memory access -> ``fused_split`` / tile geometry  (all)
-  CUDA intrinsics          -> ``use_reciprocal`` / ``use_rsqrt``
-  fast math (``__expf``)   -> ``fast_exp``
-  occupancy / grid sizing  -> ``block_rows`` / ``block_cols`` / ``chunk``
-
-``KernelSpace`` bundles everything an agent needs to act on a kernel:
-how to run it, its oracle, its analytic cost, and the legal knob moves.
+This module re-exports the registry types and the legacy names so existing
+imports (``from repro.core.variants import SPACES, KernelSpace, ...``)
+keep working unchanged.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Sequence
+from repro.kernels.registry import (SPACES, KernelSpace, Knob, TestCase,
+                                    get_space, make_inputs,
+                                    register_kernel_space,
+                                    registered_kernels)
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import flash_decode as _fd
-from repro.kernels import fused_add_rmsnorm as _rms
-from repro.kernels import merge_attn_states as _merge
-from repro.kernels import silu_and_mul as _silu
-
-
-@dataclasses.dataclass(frozen=True)
-class Knob:
-    """One legal move in the optimization space."""
-    name: str
-    kind: str                       # "pow2" | "bool"
-    lo: int = 8                     # pow2 bounds
-    hi: int = 1024
-    # which roofline terms this knob attacks; the planning agent matches
-    # knobs against the dominant term of the profile. A knob that removes a
-    # whole pass attacks both memory (traffic) and overhead (launch).
-    attacks: tuple = ("memory",)    # of "memory" | "compute" | "overhead"
-    # For bool knobs: the catalog-optimized direction (paper §5.3). The
-    # planning agent only ever moves TOWARD the target; knobs whose baseline
-    # already sits at the target (e.g. fuse_s_out) are ablation-only.
-    target: Any = None
-    note: str = ""
-
-
-@dataclasses.dataclass(frozen=True)
-class TestCase:
-    """One element of the test suite T (paper §3.1)."""
-    name: str
-    args: tuple                     # positional args to run_fn / oracle
-    shape_info: dict                # kwargs for the cost function
-
-
-@dataclasses.dataclass(frozen=True)
-class KernelSpace:
-    name: str
-    baseline: Any
-    run: Callable[..., Any]         # run(variant, *args, interpret=...)
-    oracle: Callable[..., Any]
-    cost: Callable[..., Any]        # cost(variant, **shape_info)
-    knobs: tuple[Knob, ...]
-    # shapes the TESTING agent draws the suite from (LLaMA-family dims per
-    # paper §4); values are generator kwargs, see agents.TestingAgent.
-    suite_shapes: tuple[dict, ...]
-
-    def mutate(self, variant, knob: Knob, value) -> Any:
-        new = dataclasses.replace(variant, **{knob.name: value})
-        # name = genome digest, not lineage (lineage lives in the Log)
-        return dataclasses.replace(new, name=f"{self.name}@{knob.name}={value}")
-
-
-def _run_silu(variant, x, *, interpret=True):
-    return _silu.silu_and_mul(x, variant, interpret=interpret)
-
-
-def _run_rms(variant, x, res, w, *, interpret=True):
-    return _rms.fused_add_rmsnorm(x, res, w, variant=variant,
-                                  interpret=interpret)
-
-
-def _run_merge(variant, va, sa, vb, sb, *, interpret=True):
-    return _merge.merge_attn_states_lse(va, sa, vb, sb, variant,
-                                        interpret=interpret)
-
-
-def _run_flash(variant, q, k, v, kv_len, *, interpret=True):
-    return _fd.flash_decode_attention(q, k, v, kv_len=kv_len,
-                                      variant=variant, interpret=interpret)
-
-
-def _oracle_flash(q, k, v, kv_len):
-    from repro.kernels import ref
-    return ref.flash_decode_attention(q, k, v, kv_len=kv_len)
-
-
-# Paper Table 4 shapes: K1 [seq, heads, head_dim]; K2/K3 [batch, hidden]
-# (LLaMA-7B/13B/70B dims), plus ragged/odd shapes for robustness.
-SILU_SHAPES = ({"batch": 16, "hidden": 4096}, {"batch": 32, "hidden": 5120},
-               {"batch": 64, "hidden": 8192}, {"batch": 16, "hidden": 12288},
-               {"batch": 17, "hidden": 11008})
-RMS_SHAPES = ({"batch": 256, "hidden": 4096}, {"batch": 1024, "hidden": 4096},
-              {"batch": 128, "hidden": 11008}, {"batch": 512, "hidden": 14336},
-              {"batch": 33, "hidden": 5120})
-MERGE_SHAPES = ({"seq": 512, "heads": 32, "head_dim": 256},
-                {"seq": 512, "heads": 40, "head_dim": 128},
-                {"seq": 768, "heads": 32, "head_dim": 256},
-                {"seq": 512, "heads": 64, "head_dim": 128},
-                {"seq": 100, "heads": 7, "head_dim": 128})
-FLASH_SHAPES = ({"batch": 8, "q_heads": 32, "kv_heads": 8, "head_dim": 128,
-                 "seq": 4096},
-                {"batch": 32, "q_heads": 14, "kv_heads": 2, "head_dim": 64,
-                 "seq": 2048},
-                {"batch": 4, "q_heads": 16, "kv_heads": 16, "head_dim": 128,
-                 "seq": 8192})
-
-
-SPACES: dict[str, KernelSpace] = {
-    "silu_and_mul": KernelSpace(
-        name="silu_and_mul",
-        baseline=_silu.BASELINE,
-        run=_run_silu,
-        oracle=_silu.reference,
-        cost=_silu.cost,
-        knobs=(
-            Knob("fused_split", "bool", attacks=("memory", "overhead"), target=True,
-                 note="index gate/up in-place; kills the slice-copy pass "
-                      "(round trip + launch)"),
-            Knob("block_rows", "pow2", 8, 1024, attacks=("overhead",),
-                 note="rows per grid step; bigger tiles amortize step issue"),
-            Knob("block_cols", "pow2", 128, 2048, attacks=("overhead",),
-                 note="lane-tile width; lane-aligned widths avoid padding"),
-            Knob("use_reciprocal", "bool", attacks=("compute",), target=True,
-                 note="rcp+mul instead of divide (__frcp_rn analogue)"),
-            Knob("fast_exp", "bool", attacks=("compute",), target=True,
-                 note="exp2-based sigmoid (__expf analogue)"),
-        ),
-        suite_shapes=SILU_SHAPES,
-    ),
-    "fused_add_rmsnorm": KernelSpace(
-        name="fused_add_rmsnorm",
-        baseline=_rms.BASELINE,
-        run=_run_rms,
-        oracle=_rms.reference,
-        cost=_rms.cost,
-        knobs=(
-            Knob("two_pass", "bool", attacks=("memory", "overhead"), target=False,
-                 note="False = one-pass VPU-tree reduction in VMEM "
-                      "(register-resident shuffle analogue)"),
-            Knob("block_rows", "pow2", 8, 1024, attacks=("overhead",)),
-            Knob("use_rsqrt", "bool", attacks=("compute",), target=True,
-                 note="rsqrt intrinsic instead of sqrt+div"),
-        ),
-        suite_shapes=RMS_SHAPES,
-    ),
-    "merge_attn_states_lse": KernelSpace(
-        name="merge_attn_states_lse",
-        baseline=_merge.BASELINE,
-        run=_run_merge,
-        oracle=_merge.reference,
-        cost=_merge.cost,
-        knobs=(
-            Knob("block_rows", "pow2", 8, 2048, attacks=("overhead",)),
-            Knob("hoist", "bool", attacks=("compute",), target=True,
-                 note="hoist LSE weights out of the element dimension "
-                      "(loop-invariant hoisting, paper Fig. 2)"),
-            Knob("use_reciprocal", "bool", attacks=("compute",), target=True),
-            Knob("fuse_s_out", "bool", attacks=("memory", "overhead"), target=True,
-                 note="compute S_out in the same pass"),
-        ),
-        suite_shapes=MERGE_SHAPES,
-    ),
-    "flash_decode": KernelSpace(
-        name="flash_decode",
-        baseline=_fd.BASELINE,
-        run=_run_flash,
-        oracle=_oracle_flash,
-        cost=_fd.cost,
-        knobs=(
-            Knob("mask_oob", "bool", attacks=("memory", "compute"), target=True,
-                 note="predicate chunks past kv_len (skip DMA + compute)"),
-            Knob("chunk", "pow2", 128, 4096, attacks=("overhead",),
-                 note="KV rows per grid step"),
-            Knob("use_reciprocal", "bool", attacks=("compute",), target=True),
-        ),
-        suite_shapes=FLASH_SHAPES,
-    ),
-}
-
-
-def make_inputs(kernel: str, shape: dict, *, dtype=jnp.float32,
-                seed: int = 0) -> TestCase:
-    """Materialize one test case for a kernel from a shape spec."""
-    key = jax.random.PRNGKey(seed)
-    ks = jax.random.split(key, 6)
-    if kernel == "silu_and_mul":
-        b, h = shape["batch"], shape["hidden"]
-        x = jax.random.normal(ks[0], (b, 2 * h), dtype=dtype) * 2.0
-        return TestCase(f"[{b},{h}]", (x,),
-                        {"rows": b, "d": h, "dtype": dtype})
-    if kernel == "fused_add_rmsnorm":
-        b, h = shape["batch"], shape["hidden"]
-        x = jax.random.normal(ks[0], (b, h), dtype=dtype)
-        r = jax.random.normal(ks[1], (b, h), dtype=dtype)
-        w = (1.0 + 0.1 * jax.random.normal(ks[2], (h,))).astype(dtype)
-        return TestCase(f"[{b},{h}]", (x, r, w),
-                        {"rows": b, "d": h, "dtype": dtype})
-    if kernel == "merge_attn_states_lse":
-        s, h, d = shape["seq"], shape["heads"], shape["head_dim"]
-        va = jax.random.normal(ks[0], (s, h, d), dtype=dtype)
-        vb = jax.random.normal(ks[1], (s, h, d), dtype=dtype)
-        # scores with wide dynamic range + empty partitions (-inf)
-        sa = jax.random.normal(ks[2], (s, h)) * 8.0
-        sb = jax.random.normal(ks[3], (s, h)) * 8.0
-        sb = jnp.where(jax.random.uniform(ks[4], (s, h)) < 0.05, -jnp.inf, sb)
-        return TestCase(f"[{s},{h},{d}]", (va, sa, vb, sb),
-                        {"rows": s * h, "d": d, "dtype": dtype})
-    if kernel == "flash_decode":
-        b, hq, hkv = shape["batch"], shape["q_heads"], shape["kv_heads"]
-        dh, s = shape["head_dim"], shape["seq"]
-        q = jax.random.normal(ks[0], (b, hq, dh), dtype=dtype)
-        k = jax.random.normal(ks[1], (b, s, hkv, dh), dtype=dtype)
-        v = jax.random.normal(ks[2], (b, s, hkv, dh), dtype=dtype)
-        kv_len = jax.random.randint(ks[3], (b,), 1, s + 1)
-        info = dict(shape)
-        info.update(dtype=dtype, mean_kv_len=float(jnp.mean(kv_len)))
-        return TestCase(f"[{b},{hq}/{hkv},{dh},s{s}]", (q, k, v, kv_len), info)
-    raise KeyError(kernel)
+__all__ = [
+    "SPACES", "KernelSpace", "Knob", "TestCase", "get_space", "make_inputs",
+    "register_kernel_space", "registered_kernels",
+]

@@ -34,8 +34,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import ref
+from repro.kernels import _common, ref
 from repro.kernels._common import round_up
+from repro.kernels.registry import (KernelSpace, Knob, TestCase,
+                                    register_kernel_space)
 
 NEG_INF = -1e30  # finite -inf stand-in: keeps exp() well-defined on padding
 
@@ -105,7 +107,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
     def _finalize():
         l = l_ref[...][:, :1]
         if use_reciprocal:
-            inv = jnp.where(l > 0, pl.reciprocal(l, approx=False), 0.0)
+            inv = jnp.where(l > 0, _common.reciprocal(l, approx=False), 0.0)
             o_ref[0] = (acc_ref[...] * inv).astype(o_ref.dtype)
         else:
             safe_l = jnp.where(l > 0, l, 1.0)
@@ -177,7 +179,7 @@ def flash_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((g_pad, 128), jnp.float32),
             pltpu.VMEM((g_pad, 128), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_common.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(len2, q3, k3, v3)
@@ -240,3 +242,55 @@ def cost(variant: FlashDecodeVariant, *, batch: int, q_heads: int,
 
 
 reference = ref.flash_decode_attention
+
+
+SUITE_SHAPES = ({"batch": 8, "q_heads": 32, "kv_heads": 8, "head_dim": 128,
+                 "seq": 4096},
+                {"batch": 32, "q_heads": 14, "kv_heads": 2, "head_dim": 64,
+                 "seq": 2048},
+                {"batch": 4, "q_heads": 16, "kv_heads": 16, "head_dim": 128,
+                 "seq": 8192})
+
+
+def make_inputs(shape: dict, *, dtype=jnp.float32, seed: int = 0) -> TestCase:
+    b, hq, hkv = shape["batch"], shape["q_heads"], shape["kv_heads"]
+    dh, s = shape["head_dim"], shape["seq"]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, hq, dh), dtype=dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), dtype=dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), dtype=dtype)
+    kv_len = jax.random.randint(ks[3], (b,), 1, s + 1)
+    info = dict(shape)
+    info.update(dtype=dtype, mean_kv_len=float(jnp.mean(kv_len)))
+    return TestCase(f"[{b},{hq}/{hkv},{dh},s{s}]", (q, k, v, kv_len), info)
+
+
+def _run(variant, q, k, v, kv_len, *, interpret=True):
+    return flash_decode_attention(q, k, v, kv_len=kv_len, variant=variant,
+                                  interpret=interpret)
+
+
+def _oracle(q, k, v, kv_len):
+    return ref.flash_decode_attention(q, k, v, kv_len=kv_len)
+
+
+@register_kernel_space
+def _space() -> KernelSpace:
+    return KernelSpace(
+        name="flash_decode",
+        baseline=BASELINE,
+        default=OPTIMIZED,
+        run=_run,
+        oracle=_oracle,
+        cost=cost,
+        knobs=(
+            Knob("mask_oob", "bool", attacks=("memory", "compute"),
+                 target=True,
+                 note="predicate chunks past kv_len (skip DMA + compute)"),
+            Knob("chunk", "pow2", 128, 4096, attacks=("overhead",),
+                 note="KV rows per grid step"),
+            Knob("use_reciprocal", "bool", attacks=("compute",), target=True),
+        ),
+        suite_shapes=SUITE_SHAPES,
+        make_inputs=make_inputs,
+    )

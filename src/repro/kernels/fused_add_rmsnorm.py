@@ -32,6 +32,8 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import ref
 from repro.kernels._common import cdiv, pad_rows, round_up, sublane_for
+from repro.kernels.registry import (KernelSpace, Knob, TestCase,
+                                    register_kernel_space)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,3 +207,47 @@ def cost(variant: RmsNormVariant, *, rows: int, d: int, dtype):
 
 
 reference = ref.fused_add_rmsnorm
+
+
+SUITE_SHAPES = ({"batch": 256, "hidden": 4096},
+                {"batch": 1024, "hidden": 4096},
+                {"batch": 128, "hidden": 11008},
+                {"batch": 512, "hidden": 14336},
+                {"batch": 33, "hidden": 5120})
+
+
+def make_inputs(shape: dict, *, dtype=jnp.float32, seed: int = 0) -> TestCase:
+    b, h = shape["batch"], shape["hidden"]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (b, h), dtype=dtype)
+    r = jax.random.normal(ks[1], (b, h), dtype=dtype)
+    w = (1.0 + 0.1 * jax.random.normal(ks[2], (h,))).astype(dtype)
+    return TestCase(f"[{b},{h}]", (x, r, w),
+                    {"rows": b, "d": h, "dtype": dtype})
+
+
+def _run(variant, x, res, w, *, interpret=True):
+    return fused_add_rmsnorm(x, res, w, variant=variant, interpret=interpret)
+
+
+@register_kernel_space
+def _space() -> KernelSpace:
+    return KernelSpace(
+        name="fused_add_rmsnorm",
+        baseline=BASELINE,
+        default=OPTIMIZED,
+        run=_run,
+        oracle=reference,
+        cost=cost,
+        knobs=(
+            Knob("two_pass", "bool", attacks=("memory", "overhead"),
+                 target=False,
+                 note="False = one-pass VPU-tree reduction in VMEM "
+                      "(register-resident shuffle analogue)"),
+            Knob("block_rows", "pow2", 8, 1024, attacks=("overhead",)),
+            Knob("use_rsqrt", "bool", attacks=("compute",), target=True,
+                 note="rsqrt intrinsic instead of sqrt+div"),
+        ),
+        suite_shapes=SUITE_SHAPES,
+        make_inputs=make_inputs,
+    )

@@ -37,8 +37,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import ref
+from repro.kernels import _common, ref
 from repro.kernels._common import pad_rows, round_up, sublane_for
+from repro.kernels.registry import (KernelSpace, Knob, TestCase,
+                                    register_kernel_space)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,7 +72,8 @@ def _weights(sa, sb, *, use_reciprocal):
     wb = jnp.exp(sb - m_safe)
     denom = wa + wb
     if use_reciprocal:
-        inv = jnp.where(denom > 0, pl.reciprocal(denom, approx=False), 0.0)
+        inv = jnp.where(denom > 0, _common.reciprocal(denom, approx=False),
+                        0.0)
     else:
         inv = jnp.where(denom > 0, 1.0 / denom, 0.0)
     return wa * inv, wb * inv, m + jnp.log(denom)
@@ -219,3 +222,51 @@ def cost(variant: MergeVariant, *, rows: int, d: int, dtype):
 
 
 reference = ref.merge_attn_states_lse
+
+
+SUITE_SHAPES = ({"seq": 512, "heads": 32, "head_dim": 256},
+                {"seq": 512, "heads": 40, "head_dim": 128},
+                {"seq": 768, "heads": 32, "head_dim": 256},
+                {"seq": 512, "heads": 64, "head_dim": 128},
+                {"seq": 100, "heads": 7, "head_dim": 128})
+
+
+def make_inputs(shape: dict, *, dtype=jnp.float32, seed: int = 0) -> TestCase:
+    s, h, d = shape["seq"], shape["heads"], shape["head_dim"]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    va = jax.random.normal(ks[0], (s, h, d), dtype=dtype)
+    vb = jax.random.normal(ks[1], (s, h, d), dtype=dtype)
+    # scores with wide dynamic range + empty partitions (-inf)
+    sa = jax.random.normal(ks[2], (s, h)) * 8.0
+    sb = jax.random.normal(ks[3], (s, h)) * 8.0
+    sb = jnp.where(jax.random.uniform(ks[4], (s, h)) < 0.05, -jnp.inf, sb)
+    return TestCase(f"[{s},{h},{d}]", (va, sa, vb, sb),
+                    {"rows": s * h, "d": d, "dtype": dtype})
+
+
+def _run(variant, va, sa, vb, sb, *, interpret=True):
+    return merge_attn_states_lse(va, sa, vb, sb, variant, interpret=interpret)
+
+
+@register_kernel_space
+def _space() -> KernelSpace:
+    return KernelSpace(
+        name="merge_attn_states_lse",
+        baseline=BASELINE,
+        default=OPTIMIZED,
+        run=_run,
+        oracle=reference,
+        cost=cost,
+        knobs=(
+            Knob("block_rows", "pow2", 8, 2048, attacks=("overhead",)),
+            Knob("hoist", "bool", attacks=("compute",), target=True,
+                 note="hoist LSE weights out of the element dimension "
+                      "(loop-invariant hoisting, paper Fig. 2)"),
+            Knob("use_reciprocal", "bool", attacks=("compute",), target=True),
+            Knob("fuse_s_out", "bool", attacks=("memory", "overhead"),
+                 target=True,
+                 note="compute S_out in the same pass"),
+        ),
+        suite_shapes=SUITE_SHAPES,
+        make_inputs=make_inputs,
+    )

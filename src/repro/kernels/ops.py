@@ -29,28 +29,29 @@ from repro.kernels import fused_add_rmsnorm as _rms
 from repro.kernels import merge_attn_states as _merge
 from repro.kernels import ref
 from repro.kernels import silu_and_mul as _silu
+from repro.kernels import registry as _registry
 
 Impl = Literal["auto", "pallas", "ref"]
 
-# Process-wide tuned variants (Astra writes these via ``set_variants``).
-_VARIANTS = {
-    "silu_and_mul": _silu.OPTIMIZED,
-    "fused_add_rmsnorm": _rms.OPTIMIZED,
-    "merge_attn_states_lse": _merge.OPTIMIZED,
-    "flash_decode": _fd.OPTIMIZED,
-}
+# Process-wide tuned-variant overrides (Astra writes these via
+# ``set_variants``). Dispatch reads the kernel registry: a kernel with no
+# override runs its registered space's shipped ``default`` variant, so a
+# newly-registered kernel is servable with zero edits here.
+_OVERRIDES: dict[str, object] = {}
 
 
 def set_variants(**kwargs) -> None:
     """Reintegrate tuned kernel variants (paper §3.2 post-processing)."""
     for name, variant in kwargs.items():
-        if name not in _VARIANTS:
-            raise KeyError(f"unknown kernel {name!r}; have {list(_VARIANTS)}")
-        _VARIANTS[name] = variant
+        _registry.get_space(name)       # raises KeyError on unknown kernels
+        _OVERRIDES[name] = variant
 
 
 def get_variant(name: str):
-    return _VARIANTS[name]
+    try:
+        return _OVERRIDES[name]
+    except KeyError:
+        return _registry.get_space(name).shipped
 
 
 def _use_pallas(impl: Impl) -> tuple[bool, bool]:
@@ -67,7 +68,7 @@ def silu_and_mul(x: jax.Array, *, impl: Impl = "auto") -> jax.Array:
     """SwiGLU gate: ``silu(x[..., :d]) * x[..., d:]``."""
     use, interp = _use_pallas(impl)
     if use:
-        return _silu.silu_and_mul(x, _VARIANTS["silu_and_mul"],
+        return _silu.silu_and_mul(x, get_variant("silu_and_mul"),
                                   interpret=interp)
     return ref.silu_and_mul(x)
 
@@ -78,7 +79,7 @@ def fused_add_rmsnorm(x: jax.Array, residual: jax.Array, weight: jax.Array,
     use, interp = _use_pallas(impl)
     if use:
         return _rms.fused_add_rmsnorm(x, residual, weight, eps,
-                                      _VARIANTS["fused_add_rmsnorm"],
+                                      get_variant("fused_add_rmsnorm"),
                                       interpret=interp)
     return ref.fused_add_rmsnorm(x, residual, weight, eps)
 
@@ -88,7 +89,7 @@ def merge_attn_states_lse(v_a, s_a, v_b, s_b, *, impl: Impl = "auto"):
     use, interp = _use_pallas(impl)
     if use:
         return _merge.merge_attn_states_lse(
-            v_a, s_a, v_b, s_b, _VARIANTS["merge_attn_states_lse"],
+            v_a, s_a, v_b, s_b, get_variant("merge_attn_states_lse"),
             interpret=interp)
     return ref.merge_attn_states_lse(v_a, s_a, v_b, s_b)
 
@@ -100,7 +101,7 @@ def flash_decode_attention(q, k, v, *, kv_len=None, sm_scale=None,
     if use:
         return _fd.flash_decode_attention(
             q, k, v, kv_len=kv_len, sm_scale=sm_scale,
-            variant=_VARIANTS["flash_decode"], interpret=interp,
+            variant=get_variant("flash_decode"), interpret=interp,
             return_lse=return_lse)
     out = ref.flash_decode_attention(q, k, v, kv_len=kv_len,
                                      sm_scale=sm_scale)

@@ -29,6 +29,8 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import ref
 from repro.kernels._common import LANE, cdiv, pad_rows, round_up, sublane_for
+from repro.kernels.registry import (KernelSpace, Knob, TestCase,
+                                    register_kernel_space)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,3 +196,49 @@ def cost(variant: SiluMulVariant, *, rows: int, d: int, dtype):
 
 
 reference = ref.silu_and_mul
+
+
+# Paper Table 4 shapes: [batch, hidden] (LLaMA-7B/13B/70B dims) plus
+# ragged/odd shapes for robustness.
+SUITE_SHAPES = ({"batch": 16, "hidden": 4096}, {"batch": 32, "hidden": 5120},
+                {"batch": 64, "hidden": 8192}, {"batch": 16, "hidden": 12288},
+                {"batch": 17, "hidden": 11008})
+
+
+def make_inputs(shape: dict, *, dtype=jnp.float32, seed: int = 0) -> TestCase:
+    b, h = shape["batch"], shape["hidden"]
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (b, 2 * h), dtype=dtype) * 2.0
+    return TestCase(f"[{b},{h}]", (x,), {"rows": b, "d": h, "dtype": dtype})
+
+
+def _run(variant, x, *, interpret=True):
+    return silu_and_mul(x, variant, interpret=interpret)
+
+
+@register_kernel_space
+def _space() -> KernelSpace:
+    return KernelSpace(
+        name="silu_and_mul",
+        baseline=BASELINE,
+        default=OPTIMIZED,
+        run=_run,
+        oracle=reference,
+        cost=cost,
+        knobs=(
+            Knob("fused_split", "bool", attacks=("memory", "overhead"),
+                 target=True,
+                 note="index gate/up in-place; kills the slice-copy pass "
+                      "(round trip + launch)"),
+            Knob("block_rows", "pow2", 8, 1024, attacks=("overhead",),
+                 note="rows per grid step; bigger tiles amortize step issue"),
+            Knob("block_cols", "pow2", 128, 2048, attacks=("overhead",),
+                 note="lane-tile width; lane-aligned widths avoid padding"),
+            Knob("use_reciprocal", "bool", attacks=("compute",), target=True,
+                 note="rcp+mul instead of divide (__frcp_rn analogue)"),
+            Knob("fast_exp", "bool", attacks=("compute",), target=True,
+                 note="exp2-based sigmoid (__expf analogue)"),
+        ),
+        suite_shapes=SUITE_SHAPES,
+        make_inputs=make_inputs,
+    )

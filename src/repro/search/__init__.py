@@ -1,0 +1,24 @@
+"""Pluggable kernel-optimization search subsystem.
+
+The optimization core extracted from the sequential Algorithm-1 loop:
+``Candidate`` / ``EvalResult`` datatypes, a content-addressed evaluation
+cache (each unique genome is validated/profiled at most once), and
+interchangeable search strategies (greedy chain, beam, population) that
+share the four Astra agents.
+"""
+
+from repro.search.cache import EvalCache
+from repro.search.orchestrator import (SearchOrchestrator, optimize,
+                                       optimize_all, reintegrate)
+from repro.search.strategies import (BeamSearch, GreedyChain, Population,
+                                     SearchContext, SearchStrategy,
+                                     resolve_strategy)
+from repro.search.types import (Candidate, EvalResult, genome_digest,
+                                genome_key, suite_digest)
+
+__all__ = [
+    "BeamSearch", "Candidate", "EvalCache", "EvalResult", "GreedyChain",
+    "Population", "SearchContext", "SearchOrchestrator", "SearchStrategy",
+    "genome_digest", "genome_key", "optimize", "optimize_all",
+    "reintegrate", "resolve_strategy", "suite_digest",
+]

@@ -1,0 +1,97 @@
+"""Content-addressed evaluation cache.
+
+Interpret-mode Pallas validation dominates a search's wall-clock; the
+sequential Algorithm-1 loop happily re-validates a genome it already saw
+(every revert does). The cache keys each evaluation by
+``(kernel, genome-digest, suite-digest)`` so a repeated variant is a dict
+hit — validation and profiling each run **at most once per unique genome**
+per suite, an invariant the cache itself enforces and exposes via
+``stats()`` / ``max_evals_per_genome``.
+
+Entries may be *unvalidated* (baseline genomes are correct by construction,
+so strategies profile them without paying for validation). A later request
+that needs a verdict upgrades the entry in place, reusing the stored
+profile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+
+from repro.search.types import EvalResult, genome_digest, suite_digest
+
+
+class EvalCache:
+    """Memoizes (validate, profile) per unique (kernel, genome, suite)."""
+
+    def __init__(self) -> None:
+        self._store: dict[tuple, EvalResult] = {}
+        self.hits = 0
+        self.misses = 0
+        self._validate_runs: Counter = Counter()
+        self._profile_runs: Counter = Counter()
+
+    def key(self, kernel: str, variant, tests=None, *,
+            tests_digest: str | None = None) -> tuple:
+        sd = tests_digest if tests_digest is not None else suite_digest(tests)
+        return (kernel, genome_digest(variant), sd)
+
+    def evaluate(self, space, variant, tests, *, testing, profiling,
+                 validate: bool = True,
+                 tests_digest: str | None = None) -> EvalResult:
+        """Return the (possibly cached) evaluation of ``variant``.
+
+        ``validate=False`` skips the correctness run and records the entry
+        as unvalidated with ``passed=True`` (callers use this only for
+        genomes correct by construction, e.g. the shipped baseline).
+        """
+        k = self.key(space.name, variant, tests, tests_digest=tests_digest)
+        entry = self._store.get(k)
+        if entry is not None and (entry.validated or not validate):
+            self.hits += 1
+            return dataclasses.replace(entry, cached=True)
+        self.misses += 1
+        if entry is not None:
+            # Upgrade an unvalidated entry: run validation once, keep the
+            # stored profile (profiling already ran for this genome).
+            passed, max_err = testing.validate(space, variant, tests)
+            self._validate_runs[k] += 1
+            result = EvalResult(passed, max_err, entry.profile,
+                                validated=True)
+        else:
+            if validate:
+                passed, max_err = testing.validate(space, variant, tests)
+                self._validate_runs[k] += 1
+            else:
+                passed, max_err = True, 0.0
+            profile = profiling.profile(space, variant, tests)
+            self._profile_runs[k] += 1
+            result = EvalResult(passed, max_err, profile, validated=validate)
+        self._store[k] = result
+        return result
+
+    # -- introspection ------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._store
+
+    def max_evals_per_genome(self) -> int:
+        """Worst-case number of validation/profiling runs for any genome —
+        the memoization invariant says this never exceeds 1."""
+        counts = list(self._validate_runs.values()) \
+            + list(self._profile_runs.values())
+        return max(counts, default=0)
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "entries": len(self._store),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "max_evals_per_genome": self.max_evals_per_genome(),
+        }

@@ -1,0 +1,107 @@
+"""The search orchestrator — wires the four agents, a strategy, and the
+evaluation cache into one ``optimize()`` entry point.
+
+``optimize`` / ``optimize_all`` / ``reintegrate`` keep their historical
+signatures (``repro.core.loop`` re-exports them), with one addition: a
+``strategy`` argument selecting ``"greedy"`` (the default — exact
+Algorithm-1 semantics), ``"beam"``, ``"population"``, or any
+``SearchStrategy`` instance. Cache hit counts are surfaced in the returned
+``Log.meta`` and in the verbose search log.
+"""
+
+from __future__ import annotations
+
+from repro.core.agents import (CodingAgent, PlanningAgent, ProfilingAgent,
+                               TestingAgent)
+from repro.core.oplog import Log
+from repro.kernels.registry import KernelSpace, get_space
+from repro.search.cache import EvalCache
+from repro.search.strategies import SearchContext, resolve_strategy
+
+
+class SearchOrchestrator:
+    """Owns the agent roster and the (shareable) evaluation cache; runs
+    any strategy over any registered kernel space."""
+
+    def __init__(self, *, testing: TestingAgent | None = None,
+                 profiling: ProfilingAgent | None = None,
+                 planning: PlanningAgent | None = None,
+                 coding: CodingAgent | None = None,
+                 cache: EvalCache | None = None):
+        self.testing = testing if testing is not None else TestingAgent()
+        self.profiling = profiling if profiling is not None \
+            else ProfilingAgent(reps=100)
+        self.planning = planning if planning is not None else PlanningAgent()
+        self.coding = coding if coding is not None else CodingAgent()
+        # NOT `cache or ...`: an empty EvalCache has len() == 0 and would
+        # be silently replaced, orphaning the caller's cache.
+        self.cache = cache if cache is not None else EvalCache()
+
+    def search(self, kernel: str | KernelSpace, *, strategy="greedy",
+               rounds: int = 5, verbose: bool = False) -> Log:
+        space = get_space(kernel) if isinstance(kernel, str) else kernel
+        strat = resolve_strategy(strategy)
+        tests = self.testing.generate_tests(space)
+        ctx = SearchContext(space=space, testing=self.testing,
+                            profiling=self.profiling, planning=self.planning,
+                            coding=self.coding, tests=tests,
+                            cache=self.cache, rounds=rounds, verbose=verbose)
+        before = self.cache.stats()
+        log = strat.run(ctx)
+        after = self.cache.stats()
+        log.meta.update(
+            kernel=space.name,
+            strategy=strat.name,
+            rounds=rounds,
+            cache={
+                "hits": after["hits"] - before["hits"],
+                "misses": after["misses"] - before["misses"],
+                "entries": after["entries"],
+                "max_evals_per_genome": after["max_evals_per_genome"],
+            },
+        )
+        if verbose:
+            c = log.meta["cache"]
+            print(f"[{space.name}] {strat.name}: {len(log.entries)} log "
+                  f"entries, cache hits={c['hits']} misses={c['misses']}")
+        return log
+
+
+def optimize(kernel: str | KernelSpace, *, rounds: int = 5,
+             strategy="greedy",
+             testing: TestingAgent | None = None,
+             profiling: ProfilingAgent | None = None,
+             planning: PlanningAgent | None = None,
+             coding: CodingAgent | None = None,
+             cache: EvalCache | None = None,
+             verbose: bool = False) -> Log:
+    """Run one search on one kernel. Returns the optimization Log.
+
+    With the default ``strategy="greedy"`` this is the paper's Algorithm 1,
+    preserving the historical ``optimize()`` behavior.
+    """
+    orch = SearchOrchestrator(testing=testing, profiling=profiling,
+                              planning=planning, coding=coding, cache=cache)
+    return orch.search(kernel, strategy=strategy, rounds=rounds,
+                       verbose=verbose)
+
+
+def optimize_all(*, rounds: int = 5, strategy="greedy",
+                 verbose: bool = False,
+                 kernels: tuple[str, ...] = ("merge_attn_states_lse",
+                                             "fused_add_rmsnorm",
+                                             "silu_and_mul"),
+                 cache: EvalCache | None = None) -> dict[str, Log]:
+    """Optimize the paper's kernels; returns {kernel: Log}. One orchestrator
+    (and one evaluation cache) is shared across all searches."""
+    orch = SearchOrchestrator(cache=cache)
+    return {k: orch.search(k, strategy=strategy, rounds=rounds,
+                           verbose=verbose) for k in kernels}
+
+
+def reintegrate(results: dict[str, Log]) -> None:
+    """Post-processing (paper §3.2): install each kernel's best correct
+    variant process-wide so the serving/training framework picks it up."""
+    from repro.kernels import ops
+    ops.set_variants(**{name: log.best().code
+                        for name, log in results.items()})

@@ -1,0 +1,72 @@
+"""Core datatypes of the search subsystem.
+
+A *candidate* is one point in a kernel's optimization space: the genome
+(the frozen variant dataclass the coding agent edits) plus its lineage.
+An *evaluation result* is everything the agents learn about a genome —
+correctness verdict, max error, and the profiling agent's ``Profile``.
+
+Genomes are content-addressed: ``genome_digest`` hashes the knob values
+and ignores the cosmetic ``name`` field (which records the last move, not
+the genome's identity), so two paths that reach the same knob settings
+share one evaluation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Sequence
+
+
+def genome_key(variant) -> tuple:
+    """Identity of a genome: (knob, value) pairs, ``name`` excluded."""
+    return tuple((f.name, getattr(variant, f.name))
+                 for f in dataclasses.fields(variant) if f.name != "name")
+
+
+def genome_digest(variant) -> str:
+    """Stable content hash of a genome (16 hex chars)."""
+    payload = repr((type(variant).__name__,) + genome_key(variant))
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def suite_digest(tests: Sequence, *, salt: str = "") -> str:
+    """Stable content hash of a test suite T.
+
+    Keyed on each case's name (which encodes its shape) and dtype. Two
+    agents can draw *different data* for identical shapes (different
+    ``seed``) and profiling fidelity varies with ``reps``, neither of
+    which is visible in the cases themselves — callers sharing a cache
+    across agent rosters must fold those into ``salt`` (SearchContext
+    does this automatically).
+    """
+    payload = repr([(t.name, str(t.shape_info.get("dtype")))
+                    for t in tests]) + salt
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point in the search: a genome plus where it came from."""
+    genome: Any
+    round: int = 0
+    suggestion: Any = None          # the Suggestion that produced it
+    parent_digest: str | None = None
+
+    @property
+    def digest(self) -> str:
+        return genome_digest(self.genome)
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalResult:
+    """What the testing + profiling agents learned about one genome."""
+    passed: bool
+    max_err: float
+    profile: Any                    # agents.Profile
+    validated: bool = True          # False: correctness assumed, not run
+    cached: bool = False            # True: served from the evaluation cache
+
+    @property
+    def latency_us(self) -> float:
+        return self.profile.geomean_latency_us

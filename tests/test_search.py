@@ -1,0 +1,328 @@
+"""Search subsystem: strategies, memoized evaluation, kernel registry,
+and the tolerance-semantics regression (near-zero oracle values).
+
+Fast paths use float32-only suites; the full four-kernel beam-vs-greedy
+acceptance sweep is ``@pytest.mark.slow``.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TestingAgent, ProfilingAgent, optimize
+from repro.core.agents import Suggestion
+from repro.core.policy import PolicyBackend
+from repro.kernels.registry import (KernelSpace, TestCase, SPACES, get_space,
+                                    register_kernel_space,
+                                    registered_kernels)
+from repro.search import (BeamSearch, EvalCache, GreedyChain, Population,
+                          SearchOrchestrator, genome_digest, resolve_strategy)
+
+ALL_KERNELS = ("silu_and_mul", "fused_add_rmsnorm", "merge_attn_states_lse",
+               "flash_decode")
+
+
+def fast_orchestrator(cache=None):
+    """float32-only suites: halves interpret-mode validation cost."""
+    return SearchOrchestrator(testing=TestingAgent(dtypes=(jnp.float32,)),
+                              cache=cache if cache is not None
+                              else EvalCache())
+
+
+def test_orchestrator_uses_caller_supplied_empty_cache():
+    """Regression: an empty EvalCache is falsy (len 0) — the orchestrator
+    must still adopt it rather than silently allocating its own."""
+    cache = EvalCache()
+    orch = SearchOrchestrator(cache=cache)
+    assert orch.cache is cache
+
+
+# ---------------------------------------------------------------- registry
+
+def test_all_four_kernels_registered():
+    assert registered_kernels() == tuple(sorted(ALL_KERNELS))
+    for name in ALL_KERNELS:
+        space = get_space(name)
+        assert space.name == name
+        assert space.knobs and space.suite_shapes
+        assert space.make_inputs is not None
+        assert space.shipped is not None
+
+
+def test_spaces_view_is_dict_compatible():
+    assert len(SPACES) == len(ALL_KERNELS)
+    assert set(SPACES) == set(ALL_KERNELS)
+    assert SPACES["silu_and_mul"] is get_space("silu_and_mul")
+    with pytest.raises(KeyError):
+        SPACES["no_such_kernel"]
+
+
+def test_register_rejects_duplicates_and_non_spaces():
+    with pytest.raises(ValueError):
+        register_kernel_space(get_space("silu_and_mul"))
+    with pytest.raises(TypeError):
+        register_kernel_space(lambda: "not a space")
+
+
+# ---------------------------------------------------------------- digests
+
+def test_genome_digest_ignores_cosmetic_name():
+    space = get_space("silu_and_mul")
+    a = space.baseline
+    b = dataclasses.replace(a, name="renamed-but-identical")
+    c = dataclasses.replace(a, block_rows=a.block_rows * 2)
+    assert genome_digest(a) == genome_digest(b)
+    assert genome_digest(a) != genome_digest(c)
+
+
+# ------------------------------------------------------------------ cache
+
+def test_eval_cache_memoizes_by_genome_content():
+    space = get_space("silu_and_mul")
+    testing = TestingAgent(dtypes=(jnp.float32,))
+    tests = testing.generate_tests(space)[:2]
+    profiling = ProfilingAgent(reps=100)
+    cache = EvalCache()
+
+    r1 = cache.evaluate(space, space.baseline, tests, testing=testing,
+                        profiling=profiling)
+    assert not r1.cached and r1.validated and r1.passed
+    # same knobs, different cosmetic name -> hit
+    renamed = dataclasses.replace(space.baseline, name="other")
+    r2 = cache.evaluate(space, renamed, tests, testing=testing,
+                        profiling=profiling)
+    assert r2.cached and r2.profile is r1.profile
+    assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1,
+                             "hit_rate": 0.5, "max_evals_per_genome": 1}
+
+
+def test_eval_cache_upgrades_unvalidated_entry_without_reprofiling():
+    space = get_space("silu_and_mul")
+    testing = TestingAgent(dtypes=(jnp.float32,))
+    tests = testing.generate_tests(space)[:2]
+    profiling = ProfilingAgent(reps=100)
+    cache = EvalCache()
+
+    r1 = cache.evaluate(space, space.baseline, tests, testing=testing,
+                        profiling=profiling, validate=False)
+    assert not r1.validated and r1.passed
+    r2 = cache.evaluate(space, space.baseline, tests, testing=testing,
+                        profiling=profiling, validate=True)
+    assert r2.validated and r2.profile is r1.profile
+    # profiling ran once, validation ran once: still <= 1 per genome
+    assert cache.max_evals_per_genome() == 1
+    # now fully validated: further lookups are pure hits
+    r3 = cache.evaluate(space, space.baseline, tests, testing=testing,
+                        profiling=profiling)
+    assert r3.cached
+
+
+# -------------------------------------------------------------- strategies
+
+def test_resolve_strategy_accepts_name_class_and_instance():
+    assert isinstance(resolve_strategy("greedy"), GreedyChain)
+    assert isinstance(resolve_strategy(BeamSearch), BeamSearch)
+    beam = BeamSearch(width=2)
+    assert resolve_strategy(beam) is beam
+    with pytest.raises(KeyError):
+        resolve_strategy("annealing")
+
+
+def test_cache_isolated_across_testing_seeds_and_profiling_fidelity():
+    """Suites with identical shapes but different agent seed or profiling
+    reps must not share cache entries."""
+    from repro.search.strategies import SearchContext
+    from repro.core import CodingAgent, PlanningAgent
+    space = get_space("silu_and_mul")
+    cache = EvalCache()
+
+    def ctx(seed, reps):
+        testing = TestingAgent(dtypes=(jnp.float32,), seed=seed)
+        return SearchContext(space=space, testing=testing,
+                             profiling=ProfilingAgent(reps=reps),
+                             planning=PlanningAgent(), coding=CodingAgent(),
+                             tests=testing.generate_tests(space)[:1],
+                             cache=cache)
+
+    digests = {ctx(0, 100).tests_digest, ctx(42, 100).tests_digest,
+               ctx(0, 1).tests_digest}
+    assert len(digests) == 3
+
+
+def test_plan_without_explore_holds_when_catalog_exhausted():
+    """Algorithm-1 fidelity: plan() never emits exploratory tile resizes —
+    a converged greedy chain holds position instead of oscillating."""
+    space = get_space("silu_and_mul")
+    testing = TestingAgent(dtypes=(jnp.float32,))
+    tests = testing.generate_tests(space)[:2]
+    backend = PolicyBackend()
+    # drive the genome to the catalog optimum: all bool targets reached,
+    # vmem high enough that pow2 doubling is off the table
+    opt = space.baseline
+    for knob in space.knobs:
+        if knob.kind == "bool" and knob.target is not None:
+            opt = space.mutate(opt, knob, knob.target)
+    profile = ProfilingAgent(reps=100).profile(space, opt, tests)
+    profile.signals["vmem_frac"] = 0.5          # no resize moves legal
+    history = [{"variant": opt, "passed": True, "profile": profile,
+                "suggestion": None}]
+    sugg = backend.plan(space, opt, True, profile, history)
+    assert sugg.value == getattr(opt, sugg.knob), "plan must hold, not explore"
+    # beam's plan_many still offers the exploratory breadth
+    many = backend.plan_many(space, opt, True, profile, history, k=4)
+    assert any("explore" in s.rationale for s in many)
+
+
+def test_plan_many_first_proposal_matches_greedy_plan():
+    space = get_space("silu_and_mul")
+    testing = TestingAgent(dtypes=(jnp.float32,))
+    tests = testing.generate_tests(space)[:2]
+    profile = ProfilingAgent(reps=100).profile(space, space.baseline, tests)
+    history = [{"variant": space.baseline, "passed": True,
+                "profile": profile, "suggestion": None}]
+    backend = PolicyBackend()
+    one = backend.plan(space, space.baseline, True, profile, history)
+    many = backend.plan_many(space, space.baseline, True, profile, history,
+                             k=4)
+    assert many, "policy must propose at least one move from the baseline"
+    assert (many[0].knob, many[0].value) == (one.knob, one.value)
+    assert len({(s.knob, s.value) for s in many}) == len(many)  # distinct
+    for s in many:  # no no-op proposals
+        assert s.value != getattr(space.baseline, s.knob)
+
+
+def test_beam_matches_or_beats_greedy_with_memoized_eval():
+    cache = EvalCache()
+    orch = fast_orchestrator(cache)
+    greedy = orch.search("silu_and_mul", strategy="greedy", rounds=4)
+    beam = orch.search("silu_and_mul", strategy=BeamSearch(width=4),
+                       rounds=4)
+    g, b = greedy.best(), beam.best()
+    assert b.correct
+    assert b.perf.geomean_latency_us <= g.perf.geomean_latency_us
+    # the cache guarantees each unique genome was evaluated at most once,
+    # even across the two searches; hit counts surface in the search log
+    assert cache.max_evals_per_genome() <= 1
+    assert beam.meta["cache"]["hits"] >= 1      # beam re-walked greedy's path
+    assert beam.meta["strategy"] == "beam"
+
+
+def test_population_is_seeded_and_finds_correct_variant():
+    runs = []
+    for _ in range(2):
+        orch = fast_orchestrator()
+        log = orch.search("silu_and_mul",
+                          strategy=Population(size=4, seed=7), rounds=2)
+        best = log.best()
+        assert best.correct
+        assert log.speedup() >= 1.0
+        runs.append([e.code.describe() for e in log.entries])
+    assert runs[0] == runs[1], "population search must be deterministic"
+
+
+# Reduced per-kernel suites for the four-kernel acceptance sweep: the full
+# default suites put minutes of interpret-mode flash/merge validation behind
+# every unique genome; these keep the adversarial structure (ragged rows,
+# GQA grouping, -inf empty partitions) at a bounded cost.
+REDUCED_SUITES = {
+    "silu_and_mul": ({"batch": 16, "hidden": 4096},
+                     {"batch": 17, "hidden": 11008}),
+    "fused_add_rmsnorm": ({"batch": 256, "hidden": 4096},
+                          {"batch": 33, "hidden": 5120}),
+    "merge_attn_states_lse": ({"seq": 100, "heads": 7, "head_dim": 128},
+                              {"seq": 128, "heads": 8, "head_dim": 256}),
+    "flash_decode": ({"batch": 2, "q_heads": 8, "kv_heads": 2,
+                      "head_dim": 64, "seq": 512},),
+}
+
+
+@pytest.mark.slow
+def test_beam_acceptance_all_four_kernels():
+    """Acceptance: BeamSearch(width=4) finds a correct variant at least as
+    fast (geomean cost-model latency) as GreedyChain on every registered
+    kernel, with each unique genome evaluated at most once."""
+    for kernel in ALL_KERNELS:
+        space = dataclasses.replace(get_space(kernel),
+                                    suite_shapes=REDUCED_SUITES[kernel])
+        cache = EvalCache()
+        orch = fast_orchestrator(cache)
+        greedy = orch.search(space, strategy="greedy", rounds=5)
+        beam = orch.search(space, strategy=BeamSearch(width=4), rounds=5)
+        g, b = greedy.best(), beam.best()
+        assert b.correct, kernel
+        assert b.perf.geomean_latency_us <= g.perf.geomean_latency_us, kernel
+        assert cache.max_evals_per_genome() <= 1, kernel
+
+
+# ------------------------------------------------- public API back-compat
+
+def test_optimize_accepts_strategy_and_defaults_to_greedy():
+    log = optimize("silu_and_mul", rounds=2,
+                   testing=TestingAgent(dtypes=(jnp.float32,)))
+    assert log.meta["strategy"] == "greedy"
+    assert [e.round for e in log.entries] == [0, 1, 2]
+    pop = optimize("silu_and_mul", rounds=1, strategy=Population(size=3),
+                   testing=TestingAgent(dtypes=(jnp.float32,)))
+    assert pop.meta["strategy"] == "population"
+    assert pop.best().correct
+
+
+# --------------------------------------------- tolerance semantics (fix)
+
+def _toy_space(want: np.ndarray, got: np.ndarray) -> KernelSpace:
+    @dataclasses.dataclass(frozen=True)
+    class ToyVariant:
+        name: str = "toy"
+
+    return KernelSpace(
+        name="toy", baseline=ToyVariant(),
+        run=lambda variant, *a, interpret=True: jnp.asarray(got),
+        oracle=lambda *a: jnp.asarray(want),
+        cost=None, knobs=(), suite_shapes=())
+
+
+def test_tolerance_near_zero_oracle_uses_absolute_bound():
+    """err <= atol + rtol*|want|: near zero, atol governs (f32: 1e-4)."""
+    tests = [TestCase("t", (), {"dtype": jnp.float32})]
+    agent = TestingAgent()
+    want = np.array([0.0, 1e-9, -2e-8], np.float32)
+
+    ok, err = agent.validate(_toy_space(want, want + 5e-5),
+                             _toy_space(want, want).baseline, tests)
+    assert ok and err <= 1.0
+
+    ok, err = agent.validate(_toy_space(want, want + 5e-4),
+                             _toy_space(want, want).baseline, tests)
+    assert not ok and err > 1.0
+
+
+def test_tolerance_no_longer_conflates_relative_and_absolute():
+    """Old bound (rel <= rtol + atol) let absolute error grow ~1.1e-4*|want|;
+    the correct mixed bound caps it at atol + rtol*|want|."""
+    tests = [TestCase("t", (), {"dtype": jnp.float32})]
+    agent = TestingAgent()
+    want = np.array([100.0], np.float32)
+    # err = 5e-3: old semantics passed (5e-5 relative < 1.1e-4);
+    # correct bound is 1e-4 + 1e-5*100 = 1.1e-3 -> must FAIL.
+    ok, err = agent.validate(_toy_space(want, want + 5e-3),
+                             _toy_space(want, want).baseline, tests)
+    assert not ok and err > 1.0
+    # within the mixed bound -> passes
+    ok, err = agent.validate(_toy_space(want, want + 5e-4),
+                             _toy_space(want, want).baseline, tests)
+    assert ok and err <= 1.0
+
+
+def test_tolerance_nonfinite_oracle_requires_exact_match():
+    tests = [TestCase("t", (), {"dtype": jnp.float32})]
+    agent = TestingAgent()
+    want = np.array([-np.inf, 1.0], np.float32)
+    ok, _ = agent.validate(_toy_space(want, want.copy()),
+                           _toy_space(want, want).baseline, tests)
+    assert ok
+    bad = np.array([-1e30, 1.0], np.float32)     # finite stand-in != -inf
+    ok, err = agent.validate(_toy_space(want, bad),
+                             _toy_space(want, want).baseline, tests)
+    assert not ok and err > 1.0
