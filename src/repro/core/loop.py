@@ -16,9 +16,15 @@ The loop wires the four agents exactly as the paper's pseudocode:
 The implementation now lives in the pluggable search subsystem
 (``repro.search``): ``optimize(strategy="greedy")`` is this exact loop
 (``GreedyChain``), and ``"beam"`` / ``"population"`` explore many
-candidates per round through a memoized evaluation cache. This module is
-the back-compat façade — it lazily delegates so that importing
-``repro.core`` never drags in ``repro.search`` at module-import time.
+candidates per round. Evaluation goes through the tiered engine
+(``repro.search.evaluator``): cost-model screen, smoke test, full suite,
+per-suite oracle memoization, concurrent ``workers=``-bounded batches, and
+an optionally persistent evaluation cache. On the shipped policy's greedy
+chains the engine is result-preserving end to end (see README
+"Evaluation pipeline" for the exact semantics when a cascade stage does
+trigger). This module is the back-compat façade — it lazily delegates
+so that importing ``repro.core`` never drags in ``repro.search`` at
+module-import time.
 """
 
 from __future__ import annotations

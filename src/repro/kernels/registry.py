@@ -23,6 +23,7 @@ back-compat shim.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Iterator, Mapping
 
 import jax.numpy as jnp
@@ -155,3 +156,65 @@ def make_inputs(kernel: str, shape: dict, *, dtype=jnp.float32,
         raise NotImplementedError(f"kernel {kernel!r} registered no "
                                   "make_inputs generator")
     return space.make_inputs(shape, dtype=dtype, seed=seed)
+
+
+# -- suite / oracle memoization ----------------------------------------------
+#
+# Test suites and oracle outputs depend only on (kernel, suite shapes, data
+# seed, dtypes) — never on the genome under evaluation — yet historically
+# every search and every benchmark table regenerated both per call (per
+# *genome* per test, for the oracle). These module-level memos make them
+# once-per-suite; the tiered evaluator and ``benchmarks/run.py`` both read
+# through them. ``clear_suite_memos()`` drops the (unbounded) memo arrays.
+
+_SUITE_MEMO: dict[tuple, tuple] = {}
+_ORACLE_MEMO: dict[tuple, tuple] = {}
+_MEMO_LOCK = threading.Lock()
+
+
+def suite_key(space: KernelSpace, testing) -> tuple:
+    """Identity of a generated suite: kernel + its shape spec + the testing
+    agent's class (a subclass may override ``generate_tests``), data seed,
+    and dtype roster (see ``TestingAgent.generate_tests``)."""
+    cls = type(testing)
+    return (space.name, repr(space.suite_shapes),
+            f"{cls.__module__}.{cls.__qualname__}",
+            getattr(testing, "seed", None),
+            tuple(str(jnp.dtype(d)) for d in getattr(testing, "dtypes", ())))
+
+
+def suite_tests(space: KernelSpace, testing) -> list[TestCase]:
+    """Memoized ``testing.generate_tests(space)``; one generation per
+    (kernel, shapes, seed, dtypes) process-wide."""
+    key = suite_key(space, testing)
+    with _MEMO_LOCK:
+        hit = _SUITE_MEMO.get(key)
+    if hit is not None:
+        return list(hit)
+    tests = testing.generate_tests(space)
+    with _MEMO_LOCK:
+        _SUITE_MEMO.setdefault(key, tuple(tests))
+    return list(tests)
+
+
+def oracle_outputs(space: KernelSpace, tests, *, digest: str) -> tuple[tuple, bool]:
+    """Memoized oracle outputs aligned with ``tests``, keyed by (kernel,
+    suite digest). Returns ``(outputs, computed)`` where ``computed`` is
+    True when this call paid for the oracle run (callers meter oracle work
+    with it). Computation holds the memo lock so racing evaluators never
+    duplicate the work."""
+    key = (space.name, digest)
+    with _MEMO_LOCK:
+        hit = _ORACLE_MEMO.get(key)
+        if hit is not None:
+            return hit, False
+        outs = tuple(space.oracle(*t.args) for t in tests)
+        _ORACLE_MEMO[key] = outs
+        return outs, True
+
+
+def clear_suite_memos() -> None:
+    """Drop all memoized suites and oracle outputs (frees the arrays)."""
+    with _MEMO_LOCK:
+        _SUITE_MEMO.clear()
+        _ORACLE_MEMO.clear()

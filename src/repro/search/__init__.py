@@ -2,12 +2,15 @@
 
 The optimization core extracted from the sequential Algorithm-1 loop:
 ``Candidate`` / ``EvalResult`` datatypes, a content-addressed evaluation
-cache (each unique genome is validated/profiled at most once), and
-interchangeable search strategies (greedy chain, beam, population) that
-share the four Astra agents.
+cache (thread-safe, optionally persistent across processes; each unique
+genome is validated/profiled at most once), the tiered evaluation engine
+(cost-model screen -> smoke test -> full suite, shared-oracle memoization,
+concurrent ``evaluate_many``), and interchangeable search strategies
+(greedy chain, beam, population) that share the four Astra agents.
 """
 
-from repro.search.cache import EvalCache
+from repro.search.cache import EvalCache, code_version_salt
+from repro.search.evaluator import EvalStats, TieredEvaluator
 from repro.search.orchestrator import (SearchOrchestrator, optimize,
                                        optimize_all, reintegrate)
 from repro.search.strategies import (BeamSearch, GreedyChain, Population,
@@ -17,8 +20,9 @@ from repro.search.types import (Candidate, EvalResult, genome_digest,
                                 genome_key, suite_digest)
 
 __all__ = [
-    "BeamSearch", "Candidate", "EvalCache", "EvalResult", "GreedyChain",
-    "Population", "SearchContext", "SearchOrchestrator", "SearchStrategy",
+    "BeamSearch", "Candidate", "EvalCache", "EvalResult", "EvalStats",
+    "GreedyChain", "Population", "SearchContext", "SearchOrchestrator",
+    "SearchStrategy", "TieredEvaluator", "code_version_salt",
     "genome_digest", "genome_key", "optimize", "optimize_all",
     "reintegrate", "resolve_strategy", "suite_digest",
 ]

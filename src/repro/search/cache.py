@@ -1,4 +1,4 @@
-"""Content-addressed evaluation cache.
+"""Content-addressed evaluation cache (thread-safe, optionally persistent).
 
 Interpret-mode Pallas validation dominates a search's wall-clock; the
 sequential Algorithm-1 loop happily re-validates a genome it already saw
@@ -8,34 +8,149 @@ hit — validation and profiling each run **at most once per unique genome**
 per suite, an invariant the cache itself enforces and exposes via
 ``stats()`` / ``max_evals_per_genome``.
 
+The invariant holds under concurrency: ``evaluate`` (and the tiered
+evaluator, which shares the same primitives) serializes work per key
+through ``key_lock``, so racing threads asking for the same genome get one
+computation and N-1 hits.
+
 Entries may be *unvalidated* (baseline genomes are correct by construction,
 so strategies profile them without paying for validation). A later request
 that needs a verdict upgrades the entry in place, reusing the stored
 profile.
+
+With ``persist_path`` the cache is also durable: every entry is appended to
+a JSON-lines file keyed by the same digests plus a **code-version salt**
+(a hash of the kernel sources, cost model, and agents), so repeated
+``benchmarks/run.py`` / CI invocations skip re-validating genomes an
+earlier process already proved — and a source change invalidates the whole
+file rather than serving stale verdicts. Screened entries are never
+persisted (they carry no correctness verdict and cost almost nothing to
+recompute).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import glob
+import hashlib
+import json
+import os
+import threading
 from collections import Counter
 
 from repro.search.types import EvalResult, genome_digest, suite_digest
+
+_SALT_LOCK = threading.Lock()
+_SALT: str | None = None
+_PERSIST_FORMAT = "v1"
+
+
+def code_version_salt() -> str:
+    """Hash of the sources an evaluation's outcome depends on (kernel
+    modules, cost model, agents). Folded into every persistent-cache entry:
+    editing any of those files invalidates prior entries wholesale."""
+    global _SALT
+    with _SALT_LOCK:
+        if _SALT is None:
+            # repro may be a namespace package (__file__ is None): anchor on
+            # a concrete submodule instead.
+            from repro.core import costmodel
+            root = os.path.dirname(os.path.dirname(costmodel.__file__))
+            files = sorted(glob.glob(os.path.join(root, "kernels", "*.py")))
+            files += [os.path.join(root, "core", "costmodel.py"),
+                      os.path.join(root, "core", "agents.py")]
+            h = hashlib.sha256(_PERSIST_FORMAT.encode())
+            for f in files:
+                with open(f, "rb") as fh:
+                    h.update(fh.read())
+            _SALT = h.hexdigest()[:12]
+        return _SALT
+
+
+def _jsonable(obj):
+    """JSON fallback for numpy scalars inside Profile rows."""
+    try:
+        return float(obj)
+    except (TypeError, ValueError):
+        return str(obj)
 
 
 class EvalCache:
     """Memoizes (validate, profile) per unique (kernel, genome, suite)."""
 
-    def __init__(self) -> None:
+    def __init__(self, *, persist_path: str | None = None) -> None:
         self._store: dict[tuple, EvalResult] = {}
+        self._lock = threading.Lock()
+        self._persist_lock = threading.Lock()
+        self._key_locks: dict[tuple, threading.Lock] = {}
         self.hits = 0
         self.misses = 0
+        self.preloaded = 0              # entries restored from persist_path
         self._validate_runs: Counter = Counter()
         self._profile_runs: Counter = Counter()
+        self.persist_path = persist_path
+        if persist_path:
+            self._load_persistent()
 
     def key(self, kernel: str, variant, tests=None, *,
             tests_digest: str | None = None) -> tuple:
         sd = tests_digest if tests_digest is not None else suite_digest(tests)
         return (kernel, genome_digest(variant), sd)
+
+    # -- concurrency primitives (shared with the tiered evaluator) ----------
+
+    def key_lock(self, key: tuple) -> threading.Lock:
+        """Per-key lock: whoever holds it owns computing that entry."""
+        with self._lock:
+            lk = self._key_locks.get(key)
+            if lk is None:
+                lk = self._key_locks.setdefault(key, threading.Lock())
+            return lk
+
+    def get(self, key: tuple) -> EvalResult | None:
+        with self._lock:
+            return self._store.get(key)
+
+    def try_hit(self, key: tuple, *, validate: bool = True) -> EvalResult | None:
+        """THE hit condition, single-sourced for the legacy and tiered
+        paths: a validated entry always hits; screened entries are this
+        process's final verdict so they hit too; unvalidated entries hit
+        only when the caller doesn't need a verdict. Counts the hit and
+        returns the entry marked ``cached``, else None (caller computes
+        under the key lock)."""
+        entry = self.get(key)
+        if entry is not None and (entry.validated or entry.screened
+                                  or not validate):
+            self.count_hit()
+            return dataclasses.replace(entry, cached=True)
+        return None
+
+    def put(self, key: tuple, result: EvalResult, *,
+            persist: bool = True) -> None:
+        with self._lock:
+            self._store[key] = result
+        # disk append outside the store lock: readers never stall on I/O
+        if self.persist_path and persist and not result.screened:
+            with self._persist_lock:
+                self._append_persistent(key, result)
+
+    def count_hit(self) -> None:
+        with self._lock:
+            self.hits += 1
+
+    def count_miss(self) -> None:
+        with self._lock:
+            self.misses += 1
+
+    def note_validate_run(self, key: tuple) -> None:
+        with self._lock:
+            self._validate_runs[key] += 1
+
+    def note_profile_run(self, key: tuple) -> None:
+        with self._lock:
+            self._profile_runs[key] += 1
+
+    # -- the memoized evaluation --------------------------------------------
 
     def evaluate(self, space, variant, tests, *, testing, profiling,
                  validate: bool = True,
@@ -45,53 +160,114 @@ class EvalCache:
         ``validate=False`` skips the correctness run and records the entry
         as unvalidated with ``passed=True`` (callers use this only for
         genomes correct by construction, e.g. the shipped baseline).
+
+        Thread-safe: concurrent calls for the same genome serialize on the
+        per-key lock, so validation/profiling still run at most once.
+
+        This is the *legacy* sequential pipeline: unlike the tiered
+        evaluator it calls ``testing.validate`` once with the whole suite
+        (a contract test doubles rely on) and recomputes the oracle per
+        genome. Cache semantics are shared with ``TieredEvaluator.evaluate``
+        through ``try_hit``.
         """
         k = self.key(space.name, variant, tests, tests_digest=tests_digest)
-        entry = self._store.get(k)
-        if entry is not None and (entry.validated or not validate):
-            self.hits += 1
-            return dataclasses.replace(entry, cached=True)
-        self.misses += 1
-        if entry is not None:
-            # Upgrade an unvalidated entry: run validation once, keep the
-            # stored profile (profiling already ran for this genome).
-            passed, max_err = testing.validate(space, variant, tests)
-            self._validate_runs[k] += 1
-            result = EvalResult(passed, max_err, entry.profile,
-                                validated=True)
-        else:
-            if validate:
+        with self.key_lock(k):
+            hit = self.try_hit(k, validate=validate)
+            if hit is not None:
+                return hit
+            self.count_miss()
+            entry = self.get(k)
+            if entry is not None:
+                # Upgrade an unvalidated entry: run validation once, keep the
+                # stored profile (profiling already ran for this genome).
                 passed, max_err = testing.validate(space, variant, tests)
-                self._validate_runs[k] += 1
+                self.note_validate_run(k)
+                result = EvalResult(passed, max_err, entry.profile,
+                                    validated=True)
             else:
-                passed, max_err = True, 0.0
-            profile = profiling.profile(space, variant, tests)
-            self._profile_runs[k] += 1
-            result = EvalResult(passed, max_err, profile, validated=validate)
-        self._store[k] = result
-        return result
+                if validate:
+                    passed, max_err = testing.validate(space, variant, tests)
+                    self.note_validate_run(k)
+                else:
+                    passed, max_err = True, 0.0
+                profile = profiling.profile(space, variant, tests)
+                self.note_profile_run(k)
+                result = EvalResult(passed, max_err, profile,
+                                    validated=validate)
+            self.put(k, result)
+            return result
+
+    # -- persistence ---------------------------------------------------------
+
+    def _append_persistent(self, key: tuple, result: EvalResult) -> None:
+        # caller holds self._persist_lock; one write() call per entry keeps
+        # lines whole even when several processes append to the same file
+        rec = {
+            "salt": code_version_salt(),
+            "key": list(key),
+            "passed": bool(result.passed),
+            "max_err": float(result.max_err),
+            "validated": bool(result.validated),
+            "profile": dataclasses.asdict(result.profile),
+        }
+        os.makedirs(os.path.dirname(self.persist_path) or ".", exist_ok=True)
+        with open(self.persist_path, "a") as f:
+            f.write(json.dumps(rec, default=_jsonable) + "\n")
+
+    def _load_persistent(self) -> None:
+        if not os.path.exists(self.persist_path):
+            return
+        from repro.core.agents import Profile
+        salt = code_version_salt()
+        with open(self.persist_path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                    if rec.get("salt") != salt:
+                        continue        # stale code version
+                    result = EvalResult(
+                        bool(rec["passed"]), float(rec["max_err"]),
+                        Profile(**rec["profile"]),
+                        validated=bool(rec["validated"]))
+                except (KeyError, TypeError, ValueError):
+                    continue            # torn/foreign line: ignore
+                # later lines win (an upgrade appends a second record)
+                key = tuple(rec["key"])
+                if key not in self._store:
+                    self.preloaded += 1
+                self._store[key] = result
 
     # -- introspection ------------------------------------------------------
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
     def __contains__(self, key: tuple) -> bool:
-        return key in self._store
+        with self._lock:
+            return key in self._store
 
     def max_evals_per_genome(self) -> int:
         """Worst-case number of validation/profiling runs for any genome —
         the memoization invariant says this never exceeds 1."""
-        counts = list(self._validate_runs.values()) \
-            + list(self._profile_runs.values())
+        with self._lock:
+            counts = list(self._validate_runs.values()) \
+                + list(self._profile_runs.values())
         return max(counts, default=0)
 
     def stats(self) -> dict:
-        total = self.hits + self.misses
+        with self._lock:
+            entries, hits, misses = len(self._store), self.hits, self.misses
+            preloaded = self.preloaded
+        total = hits + misses
         return {
-            "entries": len(self._store),
-            "hits": self.hits,
-            "misses": self.misses,
-            "hit_rate": self.hits / total if total else 0.0,
+            "entries": entries,
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / total if total else 0.0,
+            "preloaded": preloaded,
             "max_evals_per_genome": self.max_evals_per_genome(),
         }

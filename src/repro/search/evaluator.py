@@ -1,0 +1,258 @@
+"""Tiered candidate-evaluation engine — the search subsystem's hot path.
+
+Interpret-mode Pallas validation is what a search actually spends its
+wall-clock on; the engine makes candidates cheap in three tiers, spending
+the expensive stage only on genomes that survive the cheap ones:
+
+  tier 0  cost-model screen   The analytic profile (microseconds to
+                              compute) rejects candidates that can never
+                              win: infeasible tiles and genomes whose
+                              modeled latency is ``dominate_factor``× worse
+                              than the best *validated* latency seen so
+                              far. Screened genomes are recorded in the
+                              cache and the Log as ``screened`` — never as
+                              validated.
+  tier 1  smoke test          One validation case first — the historically
+                              most discriminative test (by failure count),
+                              cheapest first on ties — so a numerically
+                              broken genome pays for one interpret-mode run
+                              instead of the whole suite.
+  tier 2  full suite          Only survivors run the remaining cases, in
+                              suite order. Verdicts always match the
+                              sequential path; ``max_err`` matches it for
+                              every passing genome (max over the whole
+                              suite) and reflects the first failing test
+                              in *cascade* order — not suite order — for
+                              a genome that fails several tests.
+
+The jnp oracle depends only on the test suite, never on the genome, so the
+engine computes it **once per (kernel, suite)** via the registry memo and
+shares it across every candidate of every search.
+
+``evaluate_many`` evaluates a batch of genomes concurrently on a thread
+pool. Results are deterministic regardless of completion order: screening
+thresholds and smoke ordering are frozen at batch start, per-key locks in
+the shared ``EvalCache`` guarantee each unique genome is validated/profiled
+at most once even under races, and best-latency bookkeeping is replayed in
+input order after the batch.
+
+``TieredEvaluator(screen=False, smoke=False, share_oracle=False)`` is the
+reference configuration: it reproduces the sequential per-genome pipeline
+exactly (same verdicts, same ``max_err``, same oracle cost) while still
+metering work through the same counters — which is how the throughput win
+is asserted in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import Counter
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.search.types import EvalResult, suite_digest
+
+_UNSET = object()                   # "no frozen snapshot": live bookkeeping
+
+
+@dataclasses.dataclass
+class EvalStats:
+    """Work counters for one evaluator — the stage accounting that
+    ``benchmarks/run.py`` reports and the acceptance tests assert on."""
+    oracle_computations: int = 0    # oracle(*args) evaluations (per test)
+    validation_test_runs: int = 0   # interpret-mode (genome, test) runs
+    validations_full: int = 0       # genomes that went past the smoke test
+    validations_smoke_failed: int = 0   # genomes rejected by smoke alone
+    screened_infeasible: int = 0    # genomes rejected by the cost model
+    screened_dominated: int = 0     # genomes rejected as clearly dominated
+    profile_runs: int = 0           # cost-model profiles computed
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def total_work(self) -> int:
+        """Oracle evaluations + interpret-mode validation runs — the two
+        expensive operations a search performs."""
+        return self.oracle_computations + self.validation_test_runs
+
+
+class TieredEvaluator:
+    """Cascade screen -> smoke -> full-suite evaluation over a shared
+    thread-safe ``EvalCache``. One instance may serve many searches (and
+    many threads) concurrently; counters aggregate across all of them."""
+
+    def __init__(self, *, screen: bool = True, smoke: bool = True,
+                 share_oracle: bool = True, dominate_factor: float = 3.0):
+        if dominate_factor <= 1.0:
+            raise ValueError("dominate_factor must be > 1")
+        self.screen = screen
+        self.smoke = smoke
+        self.share_oracle = share_oracle
+        self.dominate_factor = dominate_factor
+        self.stats = EvalStats()
+        self._lock = threading.Lock()
+        # per (kernel, suite-digest): best validated-correct latency and
+        # per-test-index failure counts (smoke discriminative power)
+        self._best_lat: dict[tuple, float] = {}
+        self._fail_counts: dict[tuple, Counter] = {}
+
+    # -- public API ----------------------------------------------------------
+
+    def evaluate(self, space, variant, tests, *, testing, profiling, cache,
+                 validate: bool = True, tests_digest: str | None = None,
+                 _frozen=_UNSET) -> EvalResult:
+        """Tiered, cached evaluation of one genome (thread-safe)."""
+        sd = tests_digest if tests_digest is not None else suite_digest(tests)
+        k = cache.key(space.name, variant, tests, tests_digest=sd)
+        with cache.key_lock(k):
+            result = cache.try_hit(k, validate=validate)
+            if result is None:
+                cache.count_miss()
+                entry = cache.get(k)
+                if entry is not None:       # upgrade: reuse stored profile
+                    profile = entry.profile
+                else:
+                    profile = profiling.profile(space, variant, tests)
+                    cache.note_profile_run(k)
+                    with self._lock:
+                        self.stats.profile_runs += 1
+                if validate:
+                    result = self._cascade(space, variant, tests, profile,
+                                           testing, sd, k, cache,
+                                           frozen=_frozen)
+                else:
+                    result = EvalResult(True, 0.0, profile, validated=False)
+                cache.put(k, result)
+        if _frozen is _UNSET:
+            self._note_best((space.name, sd), result)
+        return result
+
+    def evaluate_many(self, space, variants, tests, *, testing, profiling,
+                      cache, validate: bool = True,
+                      tests_digest: str | None = None,
+                      workers: int = 1) -> list[EvalResult]:
+        """Evaluate a batch of genomes, concurrently when ``workers > 1``.
+
+        Deterministic: screening thresholds and smoke ordering are frozen
+        at batch start (so outcomes cannot depend on thread completion
+        order), and the best-latency bookkeeping is replayed in input order
+        afterwards. Duplicate genomes in the batch collapse to one
+        computation via the cache's per-key locks.
+        """
+        if not variants:
+            return []
+        sd = tests_digest if tests_digest is not None else suite_digest(tests)
+        skey = (space.name, sd)
+        with self._lock:
+            frozen = (self._best_lat.get(skey),
+                      dict(self._fail_counts.get(skey, ())))
+
+        def one(variant):
+            return self.evaluate(space, variant, tests, testing=testing,
+                                 profiling=profiling, cache=cache,
+                                 validate=validate, tests_digest=sd,
+                                 _frozen=frozen)
+
+        if workers > 1 and len(variants) > 1:
+            with ThreadPoolExecutor(
+                    max_workers=min(workers, len(variants))) as pool:
+                results = list(pool.map(one, variants))
+        else:
+            results = [one(v) for v in variants]
+        for result in results:              # deterministic merge order
+            self._note_best(skey, result)
+        return results
+
+    # -- the cascade ---------------------------------------------------------
+
+    def _cascade(self, space, variant, tests, profile, testing, sd, key,
+                 cache, *, frozen) -> EvalResult:
+        skey = (space.name, sd)
+        if self.screen:
+            if profile.signals.get("infeasible"):
+                with self._lock:
+                    self.stats.screened_infeasible += 1
+                return EvalResult(False, 0.0, profile, validated=False,
+                                  screened=True)
+            if frozen is _UNSET:
+                with self._lock:
+                    best = self._best_lat.get(skey)
+            else:
+                best = frozen[0]
+            if best is not None and \
+                    profile.geomean_latency_us > self.dominate_factor * best:
+                with self._lock:
+                    self.stats.screened_dominated += 1
+                return EvalResult(False, 0.0, profile, validated=False,
+                                  screened=True)
+
+        oracle = self._oracle(space, tests, sd)
+        order = self._order(skey, profile, len(tests), frozen)
+        cache.note_validate_run(key)
+        worst, passed, ran = 0.0, True, 0
+        for i in order:
+            ok, err = testing.validate(space, variant, [tests[i]],
+                                       oracle=[oracle[i]])
+            worst = max(worst, err)
+            ran += 1
+            with self._lock:
+                self.stats.validation_test_runs += 1
+            if not ok:
+                passed = False
+                with self._lock:
+                    self._fail_counts.setdefault(skey, Counter())[i] += 1
+                break
+        with self._lock:
+            if not passed and ran == 1 and self.smoke and len(tests) > 1:
+                self.stats.validations_smoke_failed += 1
+            else:
+                self.stats.validations_full += 1
+        return EvalResult(passed, worst, profile, validated=True)
+
+    def _oracle(self, space, tests, sd):
+        """Oracle outputs aligned with ``tests`` — memoized per (kernel,
+        suite) when sharing is on, recomputed per genome when off (the
+        sequential-reference accounting)."""
+        if self.share_oracle:
+            from repro.kernels.registry import oracle_outputs
+            outs, computed = oracle_outputs(space, tests, digest=sd)
+            if computed:
+                with self._lock:
+                    self.stats.oracle_computations += len(tests)
+            return outs
+        outs = tuple(space.oracle(*t.args) for t in tests)
+        with self._lock:
+            self.stats.oracle_computations += len(tests)
+        return outs
+
+    def _order(self, skey, profile, n, frozen) -> list[int]:
+        """Validation order: the smoke test first (most historical failures,
+        then cheapest by the candidate's own modeled per-test latency), the
+        rest in suite order — which keeps early-exit and ``max_err``
+        semantics identical to the sequential path for all-passing genomes.
+        """
+        if not self.smoke or n <= 1:
+            return list(range(n))
+        if frozen is _UNSET:
+            with self._lock:
+                fails = dict(self._fail_counts.get(skey, ()))
+        else:
+            fails = frozen[1]
+        rows = profile.per_shape
+        lat = [rows[i].get("latency_us", float("inf")) if i < len(rows)
+               else float("inf") for i in range(n)]
+        smoke = min(range(n), key=lambda i: (-fails.get(i, 0), lat[i], i))
+        return [smoke] + [i for i in range(n) if i != smoke]
+
+    def _note_best(self, skey, result: EvalResult) -> None:
+        if not (result.validated and result.passed):
+            return
+        lat = result.profile.geomean_latency_us
+        with self._lock:
+            cur = self._best_lat.get(skey)
+            if cur is None or lat < cur:
+                self._best_lat[skey] = lat
+
+    def stats_dict(self) -> dict:
+        with self._lock:
+            return self.stats.as_dict()

@@ -1,33 +1,40 @@
 """The search orchestrator — wires the four agents, a strategy, and the
-evaluation cache into one ``optimize()`` entry point.
+tiered evaluation engine into one ``optimize()`` entry point.
 
 ``optimize`` / ``optimize_all`` / ``reintegrate`` keep their historical
-signatures (``repro.core.loop`` re-exports them), with one addition: a
+signatures (``repro.core.loop`` re-exports them), with additions: a
 ``strategy`` argument selecting ``"greedy"`` (the default — exact
 Algorithm-1 semantics), ``"beam"``, ``"population"``, or any
-``SearchStrategy`` instance. Cache hit counts are surfaced in the returned
-``Log.meta`` and in the verbose search log.
+``SearchStrategy`` instance; and ``workers=`` bounding how many candidates
+the engine evaluates concurrently. Cache hit counts, per-search wall-clock,
+and cascade stage counters are surfaced in the returned ``Log.meta`` and
+in the verbose search log.
 """
 
 from __future__ import annotations
 
+import time
+
 from repro.core.agents import (CodingAgent, PlanningAgent, ProfilingAgent,
                                TestingAgent)
 from repro.core.oplog import Log
-from repro.kernels.registry import KernelSpace, get_space
+from repro.kernels.registry import KernelSpace, get_space, suite_tests
 from repro.search.cache import EvalCache
+from repro.search.evaluator import TieredEvaluator
 from repro.search.strategies import SearchContext, resolve_strategy
 
 
 class SearchOrchestrator:
-    """Owns the agent roster and the (shareable) evaluation cache; runs
-    any strategy over any registered kernel space."""
+    """Owns the agent roster, the (shareable) evaluation cache, and the
+    tiered evaluator; runs any strategy over any registered kernel space."""
 
     def __init__(self, *, testing: TestingAgent | None = None,
                  profiling: ProfilingAgent | None = None,
                  planning: PlanningAgent | None = None,
                  coding: CodingAgent | None = None,
-                 cache: EvalCache | None = None):
+                 cache: EvalCache | None = None,
+                 evaluator: TieredEvaluator | None = None,
+                 workers: int = 4):
         self.testing = testing if testing is not None else TestingAgent()
         self.profiling = profiling if profiling is not None \
             else ProfilingAgent(reps=100)
@@ -36,34 +43,49 @@ class SearchOrchestrator:
         # NOT `cache or ...`: an empty EvalCache has len() == 0 and would
         # be silently replaced, orphaning the caller's cache.
         self.cache = cache if cache is not None else EvalCache()
+        self.evaluator = evaluator if evaluator is not None \
+            else TieredEvaluator()
+        self.workers = max(1, workers)
 
     def search(self, kernel: str | KernelSpace, *, strategy="greedy",
                rounds: int = 5, verbose: bool = False) -> Log:
         space = get_space(kernel) if isinstance(kernel, str) else kernel
         strat = resolve_strategy(strategy)
-        tests = self.testing.generate_tests(space)
+        tests = suite_tests(space, self.testing)
         ctx = SearchContext(space=space, testing=self.testing,
                             profiling=self.profiling, planning=self.planning,
                             coding=self.coding, tests=tests,
-                            cache=self.cache, rounds=rounds, verbose=verbose)
+                            cache=self.cache, rounds=rounds, verbose=verbose,
+                            evaluator=self.evaluator, workers=self.workers)
         before = self.cache.stats()
+        ebefore = self.evaluator.stats_dict()
+        t0 = time.perf_counter()
         log = strat.run(ctx)
+        wall = time.perf_counter() - t0
         after = self.cache.stats()
+        eafter = self.evaluator.stats_dict()
         log.meta.update(
             kernel=space.name,
             strategy=strat.name,
             rounds=rounds,
+            wall_s=wall,
             cache={
                 "hits": after["hits"] - before["hits"],
                 "misses": after["misses"] - before["misses"],
                 "entries": after["entries"],
+                "preloaded": after["preloaded"],
                 "max_evals_per_genome": after["max_evals_per_genome"],
             },
+            stages={k: eafter[k] - ebefore[k] for k in eafter},
         )
         if verbose:
-            c = log.meta["cache"]
+            c, s = log.meta["cache"], log.meta["stages"]
             print(f"[{space.name}] {strat.name}: {len(log.entries)} log "
-                  f"entries, cache hits={c['hits']} misses={c['misses']}")
+                  f"entries in {wall:.2f}s, cache hits={c['hits']} "
+                  f"misses={c['misses']}, screened="
+                  f"{s['screened_infeasible'] + s['screened_dominated']} "
+                  f"smoke_fails={s['validations_smoke_failed']} "
+                  f"oracle_computations={s['oracle_computations']}")
         return log
 
 
@@ -74,14 +96,18 @@ def optimize(kernel: str | KernelSpace, *, rounds: int = 5,
              planning: PlanningAgent | None = None,
              coding: CodingAgent | None = None,
              cache: EvalCache | None = None,
+             evaluator: TieredEvaluator | None = None,
+             workers: int = 4,
              verbose: bool = False) -> Log:
     """Run one search on one kernel. Returns the optimization Log.
 
     With the default ``strategy="greedy"`` this is the paper's Algorithm 1,
-    preserving the historical ``optimize()`` behavior.
+    preserving the historical ``optimize()`` behavior (the tiered engine
+    changes how evaluations are *scheduled and cached*, not their results).
     """
     orch = SearchOrchestrator(testing=testing, profiling=profiling,
-                              planning=planning, coding=coding, cache=cache)
+                              planning=planning, coding=coding, cache=cache,
+                              evaluator=evaluator, workers=workers)
     return orch.search(kernel, strategy=strategy, rounds=rounds,
                        verbose=verbose)
 
@@ -91,10 +117,12 @@ def optimize_all(*, rounds: int = 5, strategy="greedy",
                  kernels: tuple[str, ...] = ("merge_attn_states_lse",
                                              "fused_add_rmsnorm",
                                              "silu_and_mul"),
-                 cache: EvalCache | None = None) -> dict[str, Log]:
+                 cache: EvalCache | None = None,
+                 workers: int = 4) -> dict[str, Log]:
     """Optimize the paper's kernels; returns {kernel: Log}. One orchestrator
-    (and one evaluation cache) is shared across all searches."""
-    orch = SearchOrchestrator(cache=cache)
+    (one evaluation cache, one tiered evaluator) is shared across all
+    searches."""
+    orch = SearchOrchestrator(cache=cache, workers=workers)
     return {k: orch.search(k, strategy=strategy, rounds=rounds,
                            verbose=verbose) for k in kernels}
 

@@ -35,7 +35,8 @@ from repro.search.types import EvalResult, genome_digest, suite_digest
 @dataclasses.dataclass
 class SearchContext:
     """Everything a strategy needs: the space, the four agents, the suite
-    T, the shared evaluation cache, and the round budget."""
+    T, the shared evaluation cache (plus the tiered evaluator and its
+    worker budget), and the round budget."""
     space: Any
     testing: Any
     profiling: Any
@@ -46,21 +47,43 @@ class SearchContext:
     rounds: int = 5
     verbose: bool = False
     tests_digest: str = ""
+    evaluator: Any = None           # TieredEvaluator; None = legacy path
+    workers: int = 1                # evaluate_many concurrency
 
     def __post_init__(self) -> None:
         if not self.tests_digest:
             # identical shapes/dtypes can still carry different data (agent
-            # seed) or measurement fidelity (profiling reps): salt the suite
-            # digest so evaluations never leak across agent rosters.
-            salt = repr((getattr(self.testing, "seed", None),
+            # class or seed) or measurement fidelity (profiling reps): salt
+            # the suite digest so evaluations never leak across rosters.
+            salt = repr((type(self.testing).__qualname__,
+                         getattr(self.testing, "seed", None),
                          getattr(self.profiling, "reps", None)))
             self.tests_digest = suite_digest(self.tests, salt=salt)
 
     def evaluate(self, variant, *, validate: bool = True) -> EvalResult:
+        if self.evaluator is not None:
+            return self.evaluator.evaluate(
+                self.space, variant, self.tests,
+                testing=self.testing, profiling=self.profiling,
+                cache=self.cache, validate=validate,
+                tests_digest=self.tests_digest)
         return self.cache.evaluate(
             self.space, variant, self.tests,
             testing=self.testing, profiling=self.profiling,
             validate=validate, tests_digest=self.tests_digest)
+
+    def evaluate_many(self, variants, *,
+                      validate: bool = True) -> list[EvalResult]:
+        """Evaluate a batch of genomes — concurrently (and still
+        deterministically) when an evaluator and ``workers > 1`` are set.
+        Results align with ``variants``; duplicates collapse in the cache."""
+        if self.evaluator is None:
+            return [self.evaluate(v, validate=validate) for v in variants]
+        return self.evaluator.evaluate_many(
+            self.space, variants, self.tests,
+            testing=self.testing, profiling=self.profiling, cache=self.cache,
+            validate=validate, tests_digest=self.tests_digest,
+            workers=self.workers)
 
     def history_entry(self, variant, result: EvalResult,
                       suggestion=None) -> dict:
@@ -137,7 +160,9 @@ class BeamSearch(SearchStrategy):
         frontier = [(space.baseline, base, base_hist)]
 
         for r in range(1, ctx.rounds + 1):
-            children = []
+            # Phase 1: expand every frontier member into its novel children
+            # (planning/coding only — no evaluation yet).
+            batch = []                  # (child, suggestion, parent history)
             for var, res, hist in frontier:
                 suggs = ctx.planning.suggest_many(
                     space, var, res.passed, res.profile, hist, k=self.width)
@@ -147,13 +172,19 @@ class BeamSearch(SearchStrategy):
                     if dg in seen:
                         continue        # genome already explored this search
                     seen.add(dg)
-                    cres = ctx.evaluate(child)
-                    log.append(LogEntry(r, child, cres.passed, cres.profile,
-                                        rationale=f"beam: {sugg.rationale}",
-                                        max_err=cres.max_err))
-                    children.append(
-                        (child, cres,
-                         hist + [ctx.history_entry(child, cres, sugg)]))
+                    batch.append((child, sugg, hist))
+            # Phase 2: evaluate the round's novel genomes as one concurrent
+            # batch; results come back in proposal order, so the Log is
+            # identical to the old one-at-a-time loop.
+            results = ctx.evaluate_many([c for c, _, _ in batch])
+            children = []
+            for (child, sugg, hist), cres in zip(batch, results):
+                log.append(LogEntry(r, child, cres.passed, cres.profile,
+                                    rationale=f"beam: {sugg.rationale}",
+                                    max_err=cres.max_err))
+                children.append(
+                    (child, cres,
+                     hist + [ctx.history_entry(child, cres, sugg)]))
             if not children:
                 break                   # move space exhausted
             pool = frontier + children
@@ -223,12 +254,15 @@ class Population(SearchStrategy):
         population = [self._restart(ctx, rng)
                       for _ in range(self.size - 1)]
         for gen in range(1, ctx.rounds + 1):
+            novel = []
             for genome in population:
                 dg = genome_digest(genome)
                 if dg in seen:
                     continue
                 seen.add(dg)
-                res = ctx.evaluate(genome)
+                novel.append(genome)
+            # one concurrent batch per generation; results in genome order
+            for genome, res in zip(novel, ctx.evaluate_many(novel)):
                 log.append(LogEntry(gen, genome, res.passed, res.profile,
                                     rationale=f"population gen {gen}",
                                     max_err=res.max_err))

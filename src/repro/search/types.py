@@ -66,6 +66,11 @@ class EvalResult:
     profile: Any                    # agents.Profile
     validated: bool = True          # False: correctness assumed, not run
     cached: bool = False            # True: served from the evaluation cache
+    # True: the cascade evaluator rejected this genome from the cost-model
+    # profile alone (infeasible tile or clearly dominated) — interpret-mode
+    # validation never ran, so ``validated`` is False and ``passed`` is a
+    # screening verdict, not a correctness verdict.
+    screened: bool = False
 
     @property
     def latency_us(self) -> float:

@@ -1,0 +1,417 @@
+"""Tiered evaluation engine: cascade correctness, oracle memoization,
+concurrent evaluation, persistent cross-process cache, and the
+throughput/bit-identity acceptance criteria of the engine PR.
+
+The expensive sweeps (beam counters, greedy bit-identity) run on reduced
+float32 suites so interpret-mode validation stays cheap; toy spaces cover
+the cascade edge cases exactly.
+"""
+
+import dataclasses
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CodingAgent, PlanningAgent, ProfilingAgent,
+                        TestingAgent, optimize)
+from repro.core import costmodel
+from repro.core.agents import Profile
+from repro.kernels.registry import (KernelSpace, TestCase, clear_suite_memos,
+                                    get_space, oracle_outputs, suite_tests)
+from repro.search import (BeamSearch, EvalCache, SearchOrchestrator,
+                          TieredEvaluator, code_version_salt, genome_digest)
+
+PAPER_KERNELS = ("merge_attn_states_lse", "fused_add_rmsnorm",
+                 "silu_and_mul")
+
+# Small-shape float32 suites (4 cases each): the adversarial structure
+# (ragged rows, odd head counts) at a fraction of the interpret-mode cost.
+SMALL_SUITES = {
+    "silu_and_mul": ({"batch": 16, "hidden": 1024},
+                     {"batch": 17, "hidden": 2048},
+                     {"batch": 8, "hidden": 1024},
+                     {"batch": 33, "hidden": 512}),
+    "fused_add_rmsnorm": ({"batch": 64, "hidden": 1024},
+                          {"batch": 33, "hidden": 2048},
+                          {"batch": 16, "hidden": 1024},
+                          {"batch": 8, "hidden": 512}),
+    "merge_attn_states_lse": ({"seq": 48, "heads": 7, "head_dim": 64},
+                              {"seq": 64, "heads": 4, "head_dim": 64},
+                              {"seq": 96, "heads": 8, "head_dim": 128},
+                              {"seq": 33, "heads": 2, "head_dim": 64}),
+}
+
+
+def small_space(kernel):
+    return dataclasses.replace(get_space(kernel),
+                               suite_shapes=SMALL_SUITES[kernel])
+
+
+def sequential_reference():
+    """The pre-engine per-genome pipeline, metered by the same counters:
+    no screening, no smoke stage, oracle recomputed for every genome."""
+    return TieredEvaluator(screen=False, smoke=False, share_oracle=False)
+
+
+# ------------------------------------------------------------- toy spaces
+
+@dataclasses.dataclass(frozen=True)
+class ToyVariant:
+    name: str = "toy"
+    knob: int = 1
+
+
+def _cost_for(latency_us: float) -> costmodel.Cost:
+    """A Cost whose roofline latency is ~``latency_us`` (memory-bound)."""
+    return costmodel.Cost(hbm_bytes=latency_us * 1e-6 * costmodel.HBM_BW,
+                          vpu_ops=0.0)
+
+
+def toy_space(name, *, cost=None, n_tests=2):
+    """Feasible-by-default toy space whose kernel matches its oracle."""
+    val = jnp.arange(8, dtype=jnp.float32)
+    return KernelSpace(
+        name=name, baseline=ToyVariant(),
+        run=lambda variant, *a, interpret=True: val,
+        oracle=lambda *a: val,
+        cost=cost or (lambda variant, **kw: _cost_for(10.0 * variant.knob)),
+        knobs=(), suite_shapes=()), [
+        TestCase(f"t{i}", (), {"dtype": jnp.float32})
+        for i in range(n_tests)]
+
+
+class RefusingTester(TestingAgent):
+    """A testing agent that must never be asked to validate."""
+
+    def validate(self, *a, **kw):           # pragma: no cover - the point
+        raise AssertionError("screened genome reached interpret-mode "
+                             "validation")
+
+
+class CountingTester(TestingAgent):
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.calls = 0
+        self._count_lock = threading.Lock()
+
+    def validate(self, *a, **kw):
+        with self._count_lock:
+            self.calls += 1
+        return super().validate(*a, **kw)
+
+
+# -------------------------------------------------------- cascade screens
+
+def test_infeasible_genome_is_screened_never_validated():
+    def cost(variant, **kw):
+        raise costmodel.Infeasible("VMEM over budget")
+    space, tests = toy_space("toy_infeasible", cost=cost)
+    ev, cache = TieredEvaluator(), EvalCache()
+    res = ev.evaluate(space, space.baseline, tests,
+                      testing=RefusingTester(), profiling=ProfilingAgent(),
+                      cache=cache)
+    assert res.screened and not res.validated and not res.passed
+    assert ev.stats.screened_infeasible == 1
+    assert ev.stats.validation_test_runs == 0
+    # the verdict is cached (as screened) so a repeat is a pure hit
+    again = ev.evaluate(space, space.baseline, tests,
+                        testing=RefusingTester(), profiling=ProfilingAgent(),
+                        cache=cache)
+    assert again.cached and again.screened and not again.validated
+
+
+def test_legacy_cache_evaluate_honors_screened_entries():
+    """A cache shared between the tiered and legacy paths never re-validates
+    (or overwrites) what the cascade already rejected."""
+    def cost(variant, **kw):
+        raise costmodel.Infeasible("VMEM over budget")
+    space, tests = toy_space("toy_screen_legacy", cost=cost)
+    cache = EvalCache()
+    TieredEvaluator().evaluate(space, space.baseline, tests,
+                               testing=RefusingTester(),
+                               profiling=ProfilingAgent(), cache=cache)
+    res = cache.evaluate(space, space.baseline, tests,
+                         testing=RefusingTester(),
+                         profiling=ProfilingAgent())
+    assert res.cached and res.screened and not res.validated
+
+
+def test_dominated_genome_is_screened_after_a_validated_best():
+    space, tests = toy_space("toy_dominated")
+    ev, cache = TieredEvaluator(dominate_factor=3.0), EvalCache()
+    kw = dict(testing=TestingAgent(), profiling=ProfilingAgent(),
+              cache=cache)
+    good = ev.evaluate(space, ToyVariant(knob=1), tests, **kw)   # ~10us
+    assert good.validated and good.passed
+    bad = ev.evaluate(space, ToyVariant(name="bad", knob=50), tests, **kw)
+    assert bad.screened and not bad.validated
+    assert ev.stats.screened_dominated == 1
+    # 2x worse is NOT "clearly dominated" at factor 3: it still validates
+    meh = ev.evaluate(space, ToyVariant(name="meh", knob=2), tests, **kw)
+    assert meh.validated and not meh.screened
+
+
+def test_smoke_stage_charges_one_test_for_a_broken_genome():
+    val = jnp.arange(8, dtype=jnp.float32)
+    space = KernelSpace(
+        name="toy_broken", baseline=ToyVariant(),
+        run=lambda variant, *a, interpret=True: val + 1.0,   # always wrong
+        oracle=lambda *a: val,
+        cost=lambda variant, **kw: _cost_for(10.0),
+        knobs=(), suite_shapes=())
+    tests = [TestCase(f"t{i}", (), {"dtype": jnp.float32}) for i in range(4)]
+    ev, cache = TieredEvaluator(), EvalCache()
+    res = ev.evaluate(space, space.baseline, tests, testing=TestingAgent(),
+                      profiling=ProfilingAgent(), cache=cache)
+    assert res.validated and not res.passed and not res.screened
+    assert ev.stats.validation_test_runs == 1       # smoke only, not 4
+    assert ev.stats.validations_smoke_failed == 1
+    assert ev.stats.validations_full == 0
+
+
+# ------------------------------------------------- oracle memoization
+
+def test_oracle_outputs_memoized_per_suite():
+    space, tests = toy_space("toy_oracle_memo", n_tests=3)
+    outs, computed = oracle_outputs(space, tests, digest="d1")
+    assert computed and len(outs) == 3
+    outs2, computed2 = oracle_outputs(space, tests, digest="d1")
+    assert not computed2 and outs2 is outs
+    _, computed3 = oracle_outputs(space, tests, digest="d2")
+    assert computed3                                 # new suite, new oracle
+
+
+def test_suite_tests_memoized_per_kernel_and_agent():
+    clear_suite_memos()
+    space = get_space("silu_and_mul")
+    t1 = suite_tests(space, TestingAgent(dtypes=(jnp.float32,)))
+    t2 = suite_tests(space, TestingAgent(dtypes=(jnp.float32,)))
+    assert [t.name for t in t1] == [t.name for t in t2]
+    assert t1[0] is t2[0]                            # same memoized cases
+    # a different roster or shape spec is a different suite
+    t3 = suite_tests(space, TestingAgent(dtypes=(jnp.float32,), seed=7))
+    assert t3[0] is not t1[0]
+    t4 = suite_tests(small_space("silu_and_mul"),
+                     TestingAgent(dtypes=(jnp.float32,)))
+    assert len(t4) == 4 and t4[0] is not t1[0]
+
+
+# ------------------------------------------------------- concurrency
+
+def test_eval_cache_evaluate_is_race_free():
+    """N racing threads asking for one genome: one validation, one profile,
+    N-1 hits — ``max_evals_per_genome`` stays 1."""
+    space, tests = toy_space("toy_race")
+
+    class SlowTester(CountingTester):
+        def validate(self, *a, **kw):
+            time.sleep(0.05)                # hold the key lock long enough
+            return super().validate(*a, **kw)
+
+    tester, profiler = SlowTester(), ProfilingAgent()
+    cache = EvalCache()
+    barrier = threading.Barrier(8)
+    results = [None] * 8
+
+    def worker(i):
+        barrier.wait()
+        results[i] = cache.evaluate(space, space.baseline, tests,
+                                    testing=tester, profiling=profiler)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert tester.calls == 1
+    assert cache.max_evals_per_genome() == 1
+    assert cache.stats()["hits"] == 7 and cache.stats()["misses"] == 1
+    lats = {r.profile.geomean_latency_us for r in results}
+    assert len(lats) == 1 and all(r.passed for r in results)
+
+
+def test_evaluate_many_is_parallel_deterministic_and_dedups():
+    space, tests = toy_space("toy_many")
+    variants = [ToyVariant(name=f"v{k}", knob=k) for k in (1, 2, 1, 3, 2)]
+    tester = CountingTester()
+
+    serial_ev = TieredEvaluator()
+    serial = serial_ev.evaluate_many(space, variants, tests,
+                                     testing=TestingAgent(),
+                                     profiling=ProfilingAgent(),
+                                     cache=EvalCache(), workers=1)
+    cache = EvalCache()
+    par_ev = TieredEvaluator()
+    parallel = par_ev.evaluate_many(space, variants, tests, testing=tester,
+                                    profiling=ProfilingAgent(), cache=cache,
+                                    workers=4)
+    assert len(parallel) == len(variants)
+    for s, p in zip(serial, parallel):
+        assert (s.passed, s.validated, s.screened) == \
+            (p.passed, p.validated, p.screened)
+        assert s.profile.geomean_latency_us == p.profile.geomean_latency_us
+    # duplicates collapsed: 3 unique genomes -> 3 validations, 2 hits
+    assert cache.max_evals_per_genome() == 1
+    assert len(cache) == 3 and cache.stats()["hits"] == 2
+
+
+# ------------------------------------------------- persistent cache
+
+def test_persistent_cache_round_trips_across_processes(tmp_path):
+    path = str(tmp_path / "evalcache.jsonl")
+    testing = TestingAgent(dtypes=(jnp.float32,))
+    space = small_space("silu_and_mul")
+
+    orch1 = SearchOrchestrator(testing=testing,
+                               cache=EvalCache(persist_path=path))
+    log1 = orch1.search(space, rounds=3)
+    assert log1.meta["cache"]["misses"] > 0
+
+    # a fresh cache instance = a second orchestrator process
+    cache2 = EvalCache(persist_path=path)
+    assert cache2.preloaded == log1.meta["cache"]["entries"]
+    orch2 = SearchOrchestrator(testing=testing, cache=cache2)
+    log2 = orch2.search(space, rounds=3)
+    assert log2.meta["cache"]["misses"] == 0
+    assert log2.meta["cache"]["hits"] > 0
+    assert log2.meta["stages"]["validation_test_runs"] == 0
+    assert log2.meta["stages"]["oracle_computations"] == 0
+    b1, b2 = log1.best(), log2.best()
+    assert b1.code.describe() == b2.code.describe()
+    assert b1.perf.geomean_latency_us == b2.perf.geomean_latency_us
+    assert b1.max_err == b2.max_err
+
+
+def test_persistent_cache_ignores_stale_salt_and_torn_lines(tmp_path):
+    path = str(tmp_path / "evalcache.jsonl")
+    space, tests = toy_space("toy_persist")
+    cache = EvalCache(persist_path=path)
+    cache.evaluate(space, space.baseline, tests, testing=TestingAgent(),
+                   profiling=ProfilingAgent())
+    with open(path) as f:
+        line = f.read().strip()
+    assert code_version_salt() in line
+    # a stale-salt entry and a torn line must both be skipped on load
+    with open(path, "a") as f:
+        f.write(line.replace(code_version_salt(), "deadbeef0000") + "\n")
+        f.write('{"torn": \n')
+    reloaded = EvalCache(persist_path=path)
+    assert reloaded.preloaded == 1
+
+
+# ------------------------- acceptance: bit-identity + throughput win
+
+def _pre_pr_greedy(space, rounds=5):
+    """The pre-engine greedy chain: Algorithm 1 with the digest-memoized
+    sequential evaluation exactly as the PR-1 ``GreedyChain`` ran it."""
+    tester = TestingAgent(dtypes=(jnp.float32,))
+    profiler = ProfilingAgent(reps=100)
+    planner, coder = PlanningAgent(), CodingAgent()
+    tests = tester.generate_tests(space)
+    memo = {}
+
+    def evaluate(v, validate=True):
+        dg = genome_digest(v)
+        if dg in memo and (memo[dg][3] or not validate):
+            return memo[dg]
+        if dg in memo:                          # upgrade unvalidated entry
+            ok, err = tester.validate(space, v, tests)
+            memo[dg] = (ok, err, memo[dg][2], True)
+            return memo[dg]
+        ok, err = tester.validate(space, v, tests) if validate \
+            else (True, 0.0)
+        memo[dg] = (ok, err, profiler.profile(space, v, tests), validate)
+        return memo[dg]
+
+    s_prev = space.baseline
+    _, _, perf0, _ = evaluate(s_prev, validate=False)
+    rows = [(0, s_prev.describe(), True, perf0.geomean_latency_us, 0.0,
+             "baseline")]
+    passed, perf = True, perf0
+    history = [{"variant": s_prev, "passed": True, "profile": perf0,
+                "suggestion": None}]
+    for r in range(1, rounds + 1):
+        sugg = planner.suggest(space, s_prev, passed, perf, history)
+        s_new = coder.apply(space, s_prev, sugg)
+        ok, err, pf, _ = evaluate(s_new)
+        rows.append((r, s_new.describe(), ok, pf.geomean_latency_us, err,
+                     sugg.rationale))
+        history.append({"variant": s_new, "passed": ok, "profile": pf,
+                        "suggestion": sugg})
+        s_prev, passed, perf = s_new, ok, pf
+    return rows
+
+
+def test_greedy_with_engine_is_bit_identical_to_sequential_chain():
+    """`optimize(strategy="greedy")` through the tiered engine reproduces
+    the pre-engine chain exactly: same Log entries (round, genome, verdict,
+    latency, max_err, rationale), same best variant."""
+    for kernel in PAPER_KERNELS:
+        space = small_space(kernel)
+        ref = _pre_pr_greedy(space, rounds=5)
+        log = optimize(space, rounds=5,
+                       testing=TestingAgent(dtypes=(jnp.float32,)))
+        got = [(e.round, e.code.describe(), e.correct,
+                e.perf.geomean_latency_us, e.max_err, e.rationale)
+               for e in log.entries]
+        assert got == ref, kernel
+        best_ref = min((r for r in ref if r[2]), key=lambda r: r[3])
+        assert log.best().code.describe() == best_ref[1], kernel
+
+
+def test_tiered_engine_cuts_oracle_and_validation_work_3x():
+    """BeamSearch(width=4, rounds=5) over the paper's three kernels: the
+    engine does >=3x less expensive work than the sequential per-genome
+    path — oracle computations alone and the combined total of oracle
+    computations + full-suite validations."""
+    def run_beam(evaluator):
+        for kernel in PAPER_KERNELS:
+            orch = SearchOrchestrator(
+                testing=TestingAgent(dtypes=(jnp.float32,)),
+                cache=EvalCache(), evaluator=evaluator, workers=4)
+            log = orch.search(small_space(kernel),
+                              strategy=BeamSearch(width=4), rounds=5)
+            assert log.best().correct, kernel
+        return evaluator.stats
+
+    seq = run_beam(sequential_reference())
+    clear_suite_memos()                 # tiered must pay for its own oracle
+    tier = run_beam(TieredEvaluator())
+
+    assert seq.oracle_computations >= 3 * max(tier.oracle_computations, 1)
+    combined_seq = seq.oracle_computations + seq.validations_full
+    combined_tier = tier.oracle_computations + tier.validations_full
+    assert combined_seq >= 3 * combined_tier
+    # the engine never validates more than the sequential path
+    assert tier.validation_test_runs <= seq.validation_test_runs
+    # and a genome is still never evaluated twice
+    assert seq.validations_smoke_failed == 0   # smoke off in the reference
+
+
+# ------------------------------------------------- bench.json surface
+
+def test_bench_json_reports_wall_clock_and_stage_skips(tmp_path):
+    import importlib.util
+    import os
+    spec = importlib.util.spec_from_file_location(
+        "bench_run", os.path.join(os.path.dirname(__file__), "..",
+                                  "benchmarks", "run.py"))
+    bench = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bench)
+
+    orch = SearchOrchestrator(testing=TestingAgent(dtypes=(jnp.float32,)))
+    results = {"silu_and_mul": orch.search(small_space("silu_and_mul"),
+                                           rounds=2)}
+    payload = bench.bench_json(results, path=str(tmp_path / "bench.json"))
+    (entry,) = payload["kernels"]
+    assert entry["wall_s"] > 0
+    assert entry["cache_hit_rate"] >= 0.0
+    for key in ("oracle_computations", "validation_test_runs",
+                "validations_full", "screened_infeasible",
+                "screened_dominated", "validations_smoke_failed"):
+        assert key in entry["stages"], key
+        assert key in payload["stage_totals"], key
+    assert payload["geomean_speedup"] > 0

@@ -95,7 +95,8 @@ def test_eval_cache_memoizes_by_genome_content():
                         profiling=profiling)
     assert r2.cached and r2.profile is r1.profile
     assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1,
-                             "hit_rate": 0.5, "max_evals_per_genome": 1}
+                             "hit_rate": 0.5, "preloaded": 0,
+                             "max_evals_per_genome": 1}
 
 
 def test_eval_cache_upgrades_unvalidated_entry_without_reprofiling():
