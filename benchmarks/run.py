@@ -172,29 +172,29 @@ def roofline_table(csv=True):
     return rows
 
 
-def serving_bench(csv=True):
-    """End-to-end serving throughput on the smoke config (CPU wall time —
-    a functional benchmark, not a TPU number)."""
-    import time
-    from repro.launch.serve import run
-    t0 = time.perf_counter()
-    done = run(requests=4, slots=2, max_new=4, verbose=False)
-    dt = time.perf_counter() - t0
-    toks = sum(len(r.out_tokens) for r in done)
+def serving_bench(csv=True, archs=None, mixes=None):
+    """End-to-end serving throughput through the device-resident engine
+    (CPU wall time — a functional benchmark, not a TPU number) across the
+    request mixes and both default model families. Reference comparison /
+    golden gating: ``benchmarks/serve_bench.py`` (the CI serving smoke).
+    """
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import serve_bench as sb
+    rows = sb.bench(archs or sb.DEFAULT_ARCHS, mixes or sb.MIXES)
     if csv:
-        print("# Serving — continuous batching functional bench")
-        print(f"serving/engine,{dt/max(toks,1)*1e6:.0f},"
-              f"tokens={toks},wall_s={dt:.1f}")
-    return {"tokens": toks, "seconds": dt}
+        sb.print_rows(rows)
+    return [{k: v for k, v in r.items() if k != "streams"} for r in rows]
 
 
 def bench_json(results=None, *, strategy="greedy", rounds: int = 5,
-               path: str = BENCH_JSON) -> dict:
+               path: str = BENCH_JSON, serving=None) -> dict:
     """Machine-readable perf snapshot for cross-PR trajectory tracking:
     per-kernel baseline/optimized latency, speedup, per-search wall-clock,
-    evaluation-cache hit-rate, and the tiered engine's stage counters
+    evaluation-cache hit-rate, the tiered engine's stage counters
     (oracle computations, validation runs, cascade skips) — all from
-    ``Log.meta``."""
+    ``Log.meta`` — plus the serving-engine throughput rows (tokens/s,
+    TTFT, steps, prefill retraces per request mix)."""
     from repro.core import SPACES, registered_kernels
     from repro.search import EvalCache, optimize_all
     if results is None:
@@ -229,8 +229,11 @@ def bench_json(results=None, *, strategy="greedy", rounds: int = 5,
     for k in kernels:
         for key, v in k["stages"].items():
             stage_totals[key] = stage_totals.get(key, 0) + v
+    if serving is None:   # standalone bench_json: one representative cell
+        serving = serving_bench(csv=False, archs=("qwen2-0.5b",),
+                                mixes=("ragged_burst",))
     payload = {"kernels": kernels, "geomean_speedup": geo,
-               "stage_totals": stage_totals}
+               "stage_totals": stage_totals, "serving": serving}
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=str)
@@ -301,7 +304,7 @@ def main(argv=None) -> None:
                    "serving": sv}, f, indent=2, default=str)
     print(f"# artifacts -> {ART}/paper_tables.json")
     if args.json:
-        bench_json(results)
+        bench_json(results, serving=sv)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,298 @@
+"""Serving-throughput benchmark for the continuous-batching engine.
+
+Runs the device-resident engine (and optionally the host-driven reference
+engine) over several request mixes and reports, per (arch, mix, engine):
+
+    tokens/s        end-to-end decode throughput (wall clock, includes
+                    compiles — the reference engine's per-length prefill
+                    retraces are part of what this benchmark measures)
+    ttft_ms         mean time-to-first-token (submit -> first prefill token)
+    steps           fused decode dispatches
+    prefill_compiles  prefill retraces (bucketed: bounded by the pow2
+                    bucket count; reference: one per unique prompt length)
+
+Mixes: ``uniform_short`` (one short length), ``long_tail`` (mostly short,
+a few near-window prompts), ``ragged_burst`` (8+ distinct lengths arriving
+at once). Wall times on this host are CPU numbers — a functional serving
+benchmark, not a TPU projection.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py                # bench
+    PYTHONPATH=src python benchmarks/serve_bench.py --compare      # + ref
+    PYTHONPATH=src python benchmarks/serve_bench.py --check \
+        --check-golden --arch qwen2-0.5b --mixes ragged_burst      # CI
+
+``--check`` asserts bit-identical token streams between the two engines;
+``--check-golden`` additionally compares against the recorded golden
+streams in ``benchmarks/golden/`` (``--record-golden`` refreshes them).
+Both exit non-zero on divergence. ``benchmarks/run.py --json`` embeds the
+rows under ``bench.json["serving"]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+SERVE_JSON = os.path.join(ART, "serve.json")
+
+DEFAULT_ARCHS = ("qwen2-0.5b", "olmoe-1b-7b")   # two model families
+SLOTS, MAX_SEQ, MAX_NEW, SEED = 4, 128, 8, 0
+
+
+def _mix_lengths(mix: str, rng) -> list[int]:
+    if mix == "uniform_short":
+        return [8] * 12
+    if mix == "long_tail":
+        return [int(n) for n in rng.integers(5, 11, 10)] + [48, 64]
+    if mix == "ragged_burst":
+        # 8+ distinct lengths, all submitted up front
+        lens = [int(n) for n in rng.integers(4, 41, 16)]
+        while len(set(lens)) < 8:
+            lens.append(int(rng.integers(4, 41)))
+        return lens
+    raise KeyError(f"unknown mix {mix!r}; have {sorted(MIXES)}")
+
+
+MIXES = ("uniform_short", "long_tail", "ragged_burst")
+
+
+def build_requests(cfg, mix: str, *, seed: int = SEED,
+                   max_new: int = MAX_NEW):
+    """Deterministic request list for (cfg, mix, seed)."""
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid, n in enumerate(_mix_lengths(mix, rng)):
+        if cfg.frontend == "frames":
+            prompt = rng.standard_normal((n, cfg.d_model)).astype(np.float32)
+        else:
+            prompt = rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
+        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=max_new))
+    return reqs
+
+
+def run_engine(engine, requests) -> dict:
+    """Drive one engine over a request list; returns metrics + streams."""
+    t0 = time.perf_counter()
+    for r in requests:
+        engine.submit(r)
+    done = engine.run()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    ttfts = [r.t_first - r.t_submit for r in done
+             if getattr(r, "t_first", 0) and getattr(r, "t_submit", 0)]
+    stats = engine.stats() if hasattr(engine, "stats") else {}
+    return {
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": wall,
+        "tok_per_s": toks / wall if wall else 0.0,
+        "ttft_ms": float(np.mean(ttfts)) * 1e3 if ttfts else None,
+        "steps": stats.get("steps"),
+        "prefill_compiles": stats.get("prefill_compiles"),
+        "streams": {r.rid: list(r.out_tokens) for r in done},
+    }
+
+
+def reference_rows(arch: str, mixes=MIXES, *, seed: int = SEED) -> list[dict]:
+    """Measure the host-driven reference engine (run this in a FRESH
+    process: in-process ordering would hand one engine the other's warm
+    XLA op caches and skew the comparison either way)."""
+    import jax
+    from repro import configs
+    from repro.models import registry
+    from repro.serving.reference import ReferenceEngine
+
+    cfg = configs.smoke(arch)
+    params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
+    rows = []
+    for mix in mixes:
+        reqs = build_requests(cfg, mix, seed=seed)
+        row = {"arch": arch, "mix": mix, "engine": "reference",
+               **run_engine(ReferenceEngine(params, cfg, slots=SLOTS,
+                                            max_seq=MAX_SEQ), reqs)}
+        row["prefill_compiles"] = len({len(r.prompt) for r in reqs})
+        rows.append(row)
+    return rows
+
+
+def _reference_rows_subprocess(arch: str, mixes, seed: int) -> list[dict]:
+    """Cold, isolated reference measurement via a child interpreter."""
+    import subprocess
+    import sys
+    import tempfile
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        out = f.name
+    try:
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--reference-only",
+             "--out", out, "--arch", arch, "--mixes", ",".join(mixes)],
+            env=env, capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"reference-engine subprocess failed (rc={proc.returncode})"
+                f":\n{proc.stderr[-2000:]}")
+        with open(out) as f:
+            return json.load(f)
+    finally:
+        os.unlink(out)
+
+
+def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
+               check: bool = False, seed: int = SEED) -> list[dict]:
+    """All mixes for one arch; fresh engines share one param set."""
+    import jax
+    from repro import configs
+    from repro.models import registry
+    from repro.serving.engine import Engine
+
+    cfg = configs.smoke(arch)
+    params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
+    rows = []
+    for mix in mixes:
+        rows.append({"arch": arch, "mix": mix, "engine": "device",
+                     **run_engine(Engine(params, cfg, slots=SLOTS,
+                                         max_seq=MAX_SEQ),
+                                  build_requests(cfg, mix, seed=seed))})
+    if compare or check:
+        refs = {r["mix"]: r for r in
+                _reference_rows_subprocess(arch, mixes, seed)}
+        for row in list(rows):
+            ref = refs[row["mix"]]
+            row["speedup_vs_reference"] = (ref["wall_s"] / row["wall_s"]
+                                           if row["wall_s"] else None)
+            row["streams_match_reference"] = (
+                {str(k): v for k, v in row["streams"].items()}
+                == {str(k): v for k, v in ref["streams"].items()})
+            rows.append(ref)
+    return rows
+
+
+def _golden_path(arch: str, mix: str) -> str:
+    return os.path.join(GOLDEN_DIR, f"serve_{arch}_{mix}.json")
+
+
+def check_golden(rows, *, record: bool = False) -> bool:
+    """Compare device-engine streams against the recorded goldens."""
+    ok = True
+    for row in rows:
+        if row["engine"] != "device":
+            continue
+        path = _golden_path(row["arch"], row["mix"])
+        streams = {str(k): v for k, v in row["streams"].items()}
+        if record:
+            os.makedirs(GOLDEN_DIR, exist_ok=True)
+            with open(path, "w") as f:
+                json.dump({"arch": row["arch"], "mix": row["mix"],
+                           "seed": SEED, "slots": SLOTS, "max_seq": MAX_SEQ,
+                           "max_new": MAX_NEW, "streams": streams}, f,
+                          indent=1, sort_keys=True)
+            print(f"# golden recorded -> {path}")
+            continue
+        if not os.path.exists(path):
+            # a missing golden must FAIL the check, not silently pass —
+            # otherwise a renamed arch/mix (or uncommitted goldens) turns
+            # the CI gate into a no-op
+            ok = False
+            print(f"# GOLDEN MISSING for {row['arch']}/{row['mix']}: {path} "
+                  f"(run with --record-golden and commit it)")
+            continue
+        want = json.load(open(path))["streams"]
+        if want != streams:
+            ok = False
+            bad = sorted(k for k in want if want[k] != streams.get(k))
+            print(f"# GOLDEN MISMATCH {row['arch']}/{row['mix']}: "
+                  f"rids {bad[:5]} diverge ({path})")
+    return ok
+
+
+def print_rows(rows):
+    print("# Serving — continuous batching throughput "
+          "(name,us_per_token,derived)")
+    for r in rows:
+        us = r["wall_s"] / max(r["tokens"], 1) * 1e6
+        extra = ""
+        if r.get("speedup_vs_reference") is not None:
+            extra = (f",speedup={r['speedup_vs_reference']:.2f}x,"
+                     f"match={r['streams_match_reference']}")
+        ttft = f"{r['ttft_ms']:.0f}" if r.get("ttft_ms") is not None else "na"
+        print(f"serving/{r['arch']}/{r['mix']}/{r['engine']},{us:.0f},"
+              f"tok_s={r['tok_per_s']:.1f},ttft_ms={ttft},"
+              f"steps={r['steps']},"
+              f"prefill_compiles={r['prefill_compiles']}{extra}")
+
+
+def bench(archs=DEFAULT_ARCHS, mixes=MIXES, *, compare: bool = False,
+          check: bool = False, seed: int = SEED) -> list[dict]:
+    rows = []
+    for arch in archs:
+        rows.extend(bench_arch(arch, mixes, compare=compare, check=check,
+                               seed=seed))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", dest="archs", default=None)
+    ap.add_argument("--mixes", default=",".join(MIXES),
+                    help="comma-separated subset of " + ",".join(MIXES))
+    ap.add_argument("--compare", action="store_true",
+                    help="also run the host-driven reference engine")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless device streams are bit-identical to "
+                         "the reference engine")
+    ap.add_argument("--check-golden", action="store_true",
+                    help="fail unless device streams match the recorded "
+                         "goldens in benchmarks/golden/")
+    ap.add_argument("--record-golden", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help=f"write rows (sans streams) to {SERVE_JSON}")
+    ap.add_argument("--reference-only", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: cold child process
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    mixes = tuple(m for m in args.mixes.split(",") if m)
+    if args.reference_only:
+        rows = []
+        for arch in tuple(args.archs or DEFAULT_ARCHS):
+            rows.extend(reference_rows(arch, mixes))
+        with open(args.out, "w") as f:
+            json.dump(rows, f)
+        return 0
+    rows = bench(tuple(args.archs or DEFAULT_ARCHS), mixes,
+                 compare=args.compare or args.check, check=args.check)
+    print_rows(rows)
+    rc = 0
+    if args.check:
+        bad = [r for r in rows if r["engine"] == "device"
+               and not r.get("streams_match_reference")]
+        for r in bad:
+            print(f"# STREAM MISMATCH vs reference: "
+                  f"{r['arch']}/{r['mix']}")
+        rc |= bool(bad)
+    if args.check_golden or args.record_golden:
+        rc |= not check_golden(rows, record=args.record_golden)
+    if args.json:
+        os.makedirs(ART, exist_ok=True)
+        slim = [{k: v for k, v in r.items() if k != "streams"}
+                for r in rows]
+        with open(SERVE_JSON, "w") as f:
+            json.dump(slim, f, indent=1)
+        print(f"# serving json -> {SERVE_JSON}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

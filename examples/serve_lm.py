@@ -1,6 +1,8 @@
-"""Serve a small model with batched requests through the continuous-
-batching engine (prefill + KV-cache decode; the decode path consumes the
-flash-decode kernel whose combiner is paper Kernel 1).
+"""Serve a small model with batched requests through the device-resident
+continuous-batching engine: one donated jit-ed step per decode token
+(model forward + greedy sampling + stop conditions on device, overlapped
+host readback), bucketed pow2 prefill admission, and the flash-decode
+kernel (paper Kernel 1's merge) on the attention path.
 
     PYTHONPATH=src python examples/serve_lm.py
 """

@@ -27,6 +27,7 @@ exposes — the paper's 0.73×.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
 from repro.core.agents import ProfilingAgent, Suggestion, TestingAgent
 from repro.core.oplog import Log, LogEntry
@@ -72,13 +73,13 @@ def optimize_single_agent(kernel: str | KernelSpace, *, rounds: int = 5,
     accepted_lat = perf_prev.geomean_latency_us
 
     knob_by_name = {k.name: k for k in space.knobs}
-    todo = [n for n in _CHECKLIST if n in knob_by_name]
+    todo = deque(n for n in _CHECKLIST if n in knob_by_name)
     for r in range(1, rounds + 1):
         if not todo:
             log.append(LogEntry(r, s_prev, True, perf_prev,
                                 rationale="checklist exhausted; hold"))
             continue
-        name = todo.pop(0)
+        name = todo.popleft()
         knob = knob_by_name[name]
         if knob.kind == "bool":
             # the generalist just flips switches to see what happens — it

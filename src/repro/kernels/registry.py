@@ -169,7 +169,8 @@ def make_inputs(kernel: str, shape: dict, *, dtype=jnp.float32,
 
 _SUITE_MEMO: dict[tuple, tuple] = {}
 _ORACLE_MEMO: dict[tuple, tuple] = {}
-_MEMO_LOCK = threading.Lock()
+_MEMO_LOCK = threading.Lock()          # guards the memo/lock dicts only
+_ORACLE_KEY_LOCKS: dict[tuple, threading.Lock] = {}
 
 
 def suite_key(space: KernelSpace, testing) -> tuple:
@@ -201,15 +202,26 @@ def oracle_outputs(space: KernelSpace, tests, *, digest: str) -> tuple[tuple, bo
     """Memoized oracle outputs aligned with ``tests``, keyed by (kernel,
     suite digest). Returns ``(outputs, computed)`` where ``computed`` is
     True when this call paid for the oracle run (callers meter oracle work
-    with it). Computation holds the memo lock so racing evaluators never
-    duplicate the work."""
+    with it).
+
+    Locking is per key: racing evaluators of the SAME (kernel, suite)
+    still compute the oracle exactly once, but evaluators of different
+    kernels no longer serialize on one kernel's oracle run (historically
+    the computation held the single global memo lock)."""
     key = (space.name, digest)
     with _MEMO_LOCK:
         hit = _ORACLE_MEMO.get(key)
         if hit is not None:
             return hit, False
+        key_lock = _ORACLE_KEY_LOCKS.setdefault(key, threading.Lock())
+    with key_lock:
+        with _MEMO_LOCK:
+            hit = _ORACLE_MEMO.get(key)
+        if hit is not None:
+            return hit, False
         outs = tuple(space.oracle(*t.args) for t in tests)
-        _ORACLE_MEMO[key] = outs
+        with _MEMO_LOCK:
+            _ORACLE_MEMO[key] = outs
         return outs, True
 
 
@@ -218,3 +230,4 @@ def clear_suite_memos() -> None:
     with _MEMO_LOCK:
         _SUITE_MEMO.clear()
         _ORACLE_MEMO.clear()
+        _ORACLE_KEY_LOCKS.clear()

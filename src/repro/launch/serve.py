@@ -1,4 +1,5 @@
-"""Serving driver: continuous-batching engine over the decode step.
+"""Serving driver: device-resident continuous-batching engine over the
+fused decode step (on-device sampling + stop conditions, bucketed prefill).
 
 CPU-runnable:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
@@ -28,7 +29,10 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
     t0 = time.perf_counter()
     for rid in range(requests):
         n = int(rng.integers(4, prompt_len + 1))
-        prompt = rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
+        if cfg.frontend == "frames":
+            prompt = rng.standard_normal((n, cfg.d_model)).astype(np.float32)
+        else:
+            prompt = rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
         engine.submit(Request(rid=rid, prompt=prompt,
                               max_new_tokens=max_new))
     done = engine.run()
@@ -38,8 +42,12 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
         for r in sorted(done, key=lambda r: r.rid):
             print(f"req {r.rid}: prompt[{len(r.prompt)}] -> "
                   f"{r.out_tokens}")
+        s = engine.stats()
+        ttfts = [r.t_first - r.t_submit for r in done if r.t_first]
         print(f"{len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
-              f"({total_tokens/dt:.1f} tok/s, continuous batching x{slots})")
+              f"({total_tokens/dt:.1f} tok/s, continuous batching x{slots}, "
+              f"ttft {np.mean(ttfts)*1e3:.0f}ms, {s['steps']} steps, "
+              f"{s['prefill_compiles']} prefill compiles)")
     return done
 
 

@@ -26,6 +26,13 @@ from repro.kernels import ops
 
 GROUP = 256  # tokens per dispatch group
 
+# Attention is causal, but right-padded bucketed prefill is NOT safe here:
+# pad tokens compete with real tokens for expert capacity inside the
+# router's grouped dispatch, so padding can change real-token outputs (a
+# capacity drop that an exact-length prefill would not have). The serving
+# engine therefore prefills MoE prompts at exact length.
+PAD_PREFILL = False
+
 
 def capacity(cfg: ModelConfig, group: int) -> int:
     c = int(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
@@ -164,7 +171,7 @@ init_cache = T.init_cache
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
-            cache_len: int | None = None):
+            cache_len: int | None = None, length=None):
     b, s = tokens.shape
     hidden = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
     residual = jnp.zeros_like(hidden)
@@ -192,7 +199,8 @@ def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
         pad = ((0, 0), (0, 0), (0, cache_len - ks.shape[2]), (0, 0), (0, 0))
         ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
     cache = {"k": ks, "v": vs}
-    normed, _ = L.add_rms_norm(hidden[:, -1:], residual[:, -1:],
+    h_last, r_last = T._last_position(hidden, residual, length)
+    normed, _ = L.add_rms_norm(h_last, r_last,
                                params["final_norm"], cfg.norm_eps)
     return L.unembed(normed[:, 0], params["lm_head"]), cache
 

@@ -30,6 +30,11 @@ from repro.models import layers as L
 
 C_RGLRU = 8.0
 
+# The RG-LRU recurrence and the causal-conv state absorb every processed
+# token, so right-padded bucketed prefill would corrupt both. The serving
+# engine prefills Griffin prompts at exact length.
+PAD_PREFILL = False
+
 
 # --------------------------------------------------------------------------
 # init
@@ -240,7 +245,8 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int):
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
-            cache_len: int | None = None):
+            cache_len: int | None = None, length=None):
+    assert length is None, "griffin prefill does not support padded prompts"
     b, s = tokens.shape
     x = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
     w = min(s, cfg.window or s)

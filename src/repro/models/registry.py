@@ -40,9 +40,10 @@ def loss_fn(params, cfg: ModelConfig, batch):
     return module_for(cfg).loss_fn(params, cfg, batch)
 
 
-def prefill(params, cfg: ModelConfig, prompt, *, cache_len=None):
+def prefill(params, cfg: ModelConfig, prompt, *, cache_len=None,
+            length=None):
     return module_for(cfg).prefill(params, cfg, prompt,
-                                   cache_len=cache_len)
+                                   cache_len=cache_len, length=length)
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
@@ -57,6 +58,43 @@ def cache_spec(cfg: ModelConfig, batch: int, seq: int):
 
 def init_cache(cfg: ModelConfig, batch: int, seq: int):
     return module_for(cfg).init_cache(cfg, batch, seq)
+
+
+def pad_prefill_ok(cfg: ModelConfig) -> bool:
+    """True when this family's prefill is exact under right-padding — the
+    serving engine buckets prompt lengths to powers of two only then."""
+    return bool(getattr(module_for(cfg), "PAD_PREFILL", False))
+
+
+def write_slot(cfg: ModelConfig, pool, new, slot, max_seq: int):
+    """Scatter one request's prefill cache (batch=1) into pool slot ``slot``.
+
+    The batch/seq axes differ per family (xLSTM stacks states as
+    [periods, stack, batch, ...]; Griffin mixes KV and recurrent leaves), so
+    the scatter is driven by the logical axes from ``cache_spec`` — each
+    leaf is written along its "batch" axis and clipped along "kv_seq" to
+    the pool's sequence capacity. ``slot`` may be a traced scalar, so one
+    jitted admission function serves every slot. (The historical engine
+    hardcoded axis 1, silently corrupting xLSTM/Griffin recurrent state on
+    slot scatter.)"""
+    _, axes = cache_spec(cfg, 1, max_seq)
+    is_ax = lambda x: isinstance(x, tuple)
+    pool_leaves, treedef = jax.tree.flatten(pool)
+    new_leaves = jax.tree.leaves(new)
+    ax_leaves = jax.tree.leaves(axes, is_leaf=is_ax)
+    out = []
+    for p, n, ax in zip(pool_leaves, new_leaves, ax_leaves):
+        ba = ax.index("batch")
+        if "kv_seq" in ax:
+            sa = ax.index("kv_seq")
+            cap, s = p.shape[sa], n.shape[sa]
+            if s > cap:  # rolling-window prefill keeps the last `cap`
+                n = jax.lax.slice_in_dim(n, s - cap, s, axis=sa)
+        starts = [0] * p.ndim
+        starts[ba] = jnp.asarray(slot, jnp.int32)
+        out.append(jax.lax.dynamic_update_slice(
+            p, n.astype(p.dtype), tuple(starts)))
+    return jax.tree.unflatten(treedef, out)
 
 
 # --------------------------------------------------------------------------

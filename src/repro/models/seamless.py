@@ -26,6 +26,11 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 
 
+# The encoder is bidirectional: pad frames would contaminate every
+# position's encoding, so source frames are always encoded at exact length.
+PAD_PREFILL = False
+
+
 def _cross_attn_params(key, cfg, dtype):
     return L.attn_params(key, cfg, dtype)
 
@@ -181,11 +186,12 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int):
 
 
 def prefill(params, cfg: ModelConfig, frames, *, chunk: int = 512,
-            cache_len: int | None = None):
+            cache_len: int | None = None, length=None):
     """Encode source frames and precompute cross K/V; self cache empty.
 
     Returns (BOS logits, cache). frames: [B, S_src, D].
     """
+    assert length is None, "enc-dec prefill does not support padded frames"
     b, s_src, _ = frames.shape
     enc_out = encode(params, cfg, frames, chunk=chunk)
 

@@ -21,6 +21,13 @@ from jax import lax
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 
+# Right-padding a prompt to a bucketed length is safe here: the cache is
+# positional K/V and attention is causal, so pad positions can never
+# influence positions < length, and decode's kv_len mask hides them until
+# they are overwritten in place. The serving engine keys bucketed prefill
+# admission on this flag.
+PAD_PREFILL = True
+
 
 # --------------------------------------------------------------------------
 # init
@@ -136,9 +143,12 @@ def _block_prefill(p_layer, carry, cfg: ModelConfig, chunk: int):
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
-            cache_len: int | None = None):
+            cache_len: int | None = None, length=None):
     """Process the prompt; returns (last-position logits, filled cache).
-    ``cache_len`` pre-sizes the cache for subsequent decode_steps."""
+    ``cache_len`` pre-sizes the cache for subsequent decode_steps.
+    ``length`` (traced i32 scalar) marks the true prompt length when
+    ``tokens`` is right-padded to a bucket: logits are taken at position
+    ``length - 1`` instead of the (pad) last position."""
     b, s = tokens.shape
     hidden = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
     residual = jnp.zeros_like(hidden)
@@ -168,9 +178,20 @@ def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
         pad = ((0, 0), (0, 0), (0, target - ks.shape[2]), (0, 0), (0, 0))
         ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
     cache = {"k": ks, "v": vs}
-    normed, _ = L.add_rms_norm(hidden[:, -1:], residual[:, -1:],
+    h_last, r_last = _last_position(hidden, residual, length)
+    normed, _ = L.add_rms_norm(h_last, r_last,
                                params["final_norm"], cfg.norm_eps)
     return L.unembed(normed[:, 0], params["lm_head"]), cache
+
+
+def _last_position(hidden, residual, length):
+    """[B,1,D] slices of the final prompt position (``length-1`` when the
+    prompt is right-padded, else the literal last position)."""
+    if length is None:
+        return hidden[:, -1:], residual[:, -1:]
+    idx = jnp.asarray(length, jnp.int32) - 1
+    return (lax.dynamic_slice_in_dim(hidden, idx, 1, axis=1),
+            lax.dynamic_slice_in_dim(residual, idx, 1, axis=1))
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos, *,

@@ -31,6 +31,11 @@ from repro.models import layers as L
 
 CHUNK = 64  # remat chunk for the recurrent scans
 
+# Recurrent state: every processed token (pad or not) mutates (C, n, m), so
+# right-padded bucketed prefill would corrupt the carried state. The serving
+# engine prefills xLSTM prompts at exact length.
+PAD_PREFILL = False
+
 
 def _dims(cfg: ModelConfig):
     d_inner = 2 * cfg.d_model
@@ -351,9 +356,11 @@ def _state_of(cache, kind):
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
-            cache_len: int | None = None):
+            cache_len: int | None = None, length=None):
     """Run the prompt through the recurrence, collecting final states.
-    ``cache_len`` is irrelevant: the state is O(1) in sequence length."""
+    ``cache_len`` is irrelevant: the state is O(1) in sequence length.
+    ``length`` must be None (PAD_PREFILL is False — exact-length prompts)."""
+    assert length is None, "xlstm prefill does not support padded prompts"
     b, s = tokens.shape
     x = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
 

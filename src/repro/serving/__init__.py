@@ -1,0 +1,7 @@
+"""Continuous-batching serving: the device-resident engine and the
+host-driven reference implementation it is proven bit-identical against."""
+
+from repro.serving.engine import Engine, Request
+from repro.serving.reference import ReferenceEngine
+
+__all__ = ["Engine", "Request", "ReferenceEngine"]

@@ -1,19 +1,43 @@
-"""Continuous-batching serving engine (the system the kernels live in).
+"""Device-resident continuous-batching serving engine.
 
 A fixed pool of decode slots; requests join as slots free up (continuous
-batching à la SGLang/vLLM). Each step is ONE jit-ed ``decode_step`` over
-the whole pool — finished/empty slots are masked, their cache slots are
-recycled in place. Prefill runs per-request (chunked) and its KV is
-scattered into the pool cache.
+batching à la SGLang/vLLM). The decode hot path never leaves the device:
 
-This is the end-to-end consumer of all three paper kernels on TPU:
-flash-decode (with the Kernel-1 merge), fused add-RMSNorm, silu-and-mul.
+* **Donated fused step** — one jit-ed program per engine runs the model
+  decode step, greedy sampling (argmax over the real vocab), stop-condition
+  evaluation (max-new-tokens / max-seq), and slot masking. The KV/state
+  pool cache and the token/pos/active/emitted buffers are donated
+  (``donate_argnums``), so on TPU/GPU the cache updates in place instead of
+  being copied every token (CPU ignores donation with a warning we
+  suppress).
+* **Overlapped readback** — the host reads ONE small batched emit
+  (token-or-minus-one, done flags) per step, and the readback of step *k*
+  is deferred until after step *k+1* has been dispatched. There is no
+  per-slot ``int(next_tok[i])`` sync anywhere.
+* **Bucketed, jitted admission** — prefill + the pool-cache scatter + slot
+  state reset are ONE jitted function whose compile key is the padded
+  prompt shape. Families whose prefill is exact under right-padding
+  (``PAD_PREFILL`` — causal attention over a positional KV cache) pad
+  prompts to power-of-two buckets, so an arbitrary request mix triggers at
+  most ``log2(max_seq)+1`` prefill compiles. Stateful families (MoE
+  capacity routing, recurrences, bidirectional encoders) prefill at exact
+  length — identical to the historical engine's compile behavior.
+
+Token streams are bit-identical to the historical host-driven engine
+(``repro.serving.reference.ReferenceEngine``); asserted end-to-end in
+``tests/test_serving.py``. This is the end-to-end consumer of all three
+paper kernels on TPU: flash-decode (with the Kernel-1 merge), fused
+add-RMSNorm, silu-and-mul.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Callable, Optional
+import time
+import warnings
+from collections import deque
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,98 +47,242 @@ from repro.configs.base import ModelConfig
 from repro.models import registry
 
 
+@contextlib.contextmanager
+def _quiet_donation():
+    """Donation is a TPU/GPU in-place-update optimization; the CPU backend
+    ignores it and warns once per compile. Scoped to the engine's dispatch
+    sites so importing this module doesn't mutate the global filter."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray                  # token ids [S] (or frames)
+    prompt: np.ndarray                  # token ids [S] (or frames [S, D])
     max_new_tokens: int = 16
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0               # set by Engine.submit
+    t_first: float = 0.0                # wall time of the first token (TTFT)
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Optional[Request] = None
-    pos: int = 0
+    start: int = 0                      # decode start position (host copy)
 
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  max_seq: int = 512, greedy: bool = True):
+        if not greedy:
+            raise NotImplementedError("only greedy (argmax) sampling")
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_seq = slots, max_seq
         self.slots = [_Slot() for _ in range(slots)]
         self.cache, _ = registry.init_cache(cfg, slots, max_seq)
-        self.queue: list[Request] = []
+        self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
-        self._decode = jax.jit(
-            lambda p, c, t, pos: registry.decode_step(p, cfg, c, t, pos))
+        self._pad_ok = registry.pad_prefill_ok(cfg)
+        # device-resident per-slot decode state
         self._token = jnp.zeros((slots,), jnp.int32)
         self._pos = jnp.zeros((slots,), jnp.int32)
+        self._active = jnp.zeros((slots,), jnp.bool_)
+        self._emitted = jnp.zeros((slots,), jnp.int32)
+        self._max_new = jnp.zeros((slots,), jnp.int32)
+        self._step_fn = jax.jit(self._make_step(),
+                                donate_argnums=(1, 2, 3, 4, 5))
+        # Admission (prefill + pool scatter + slot state reset) is ONE
+        # jitted program keyed by the (padded) prompt shape: bucketed
+        # families compile at most log2(max_seq)+1 of them; exact-length
+        # families (MoE capacity routing, recurrences, bidirectional
+        # encoders) compile per unique length — the historical engine's
+        # behavior, minus its eager scatter and host argmax.
+        self._admit_fn = jax.jit(self._make_admit(),
+                                 donate_argnums=(1, 2, 3, 4, 5, 6))
+        # (emit arrays, request snapshot) of the last dispatched step, not
+        # yet read back — drained after the NEXT dispatch (overlap)
+        self._pending = None
+        self._steps = 0
+        self._prefill_shapes: set[tuple] = set()
+
+    # -- jitted programs -----------------------------------------------------
+
+    def _make_step(self):
+        cfg, vocab, max_seq = self.cfg, self.cfg.vocab, self.max_seq
+
+        def fused(params, cache, token, pos, active, emitted, max_new):
+            logits, cache = registry.decode_step(params, cfg, cache,
+                                                 token, pos)
+            # greedy sampling over the whole pool (masked slots produce a
+            # token too — exactly like the host engine — so families whose
+            # decode couples slots, e.g. MoE capacity routing, see an
+            # identical pool state)
+            nxt = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+            new_pos = pos + 1
+            new_emitted = emitted + active.astype(jnp.int32)
+            done = active & ((new_emitted >= max_new)
+                             | (new_pos >= max_seq - 1))
+            new_active = active & ~done
+            # the emit pair is computed DIFFERENTLY from the state outputs
+            # so its buffers never alias state buffers donated into the
+            # next dispatch while the host still holds the emit
+            emit_tok = jnp.where(active, nxt, -1)
+            return (cache, nxt, new_pos, new_active, new_emitted,
+                    (emit_tok, done))
+
+        return fused
+
+    def _make_admit(self):
+        cfg, vocab, max_seq = self.cfg, self.cfg.vocab, self.max_seq
+        encdec = cfg.family == "encdec"
+        pad_ok = self._pad_ok
+
+        def admit(params, cache, token, pos, active, emitted, max_new,
+                  prompt, length, slot, req_max_new):
+            logits, kv = registry.prefill(
+                params, cfg, prompt[None],
+                length=length if pad_ok else None)
+            cache = registry.write_slot(cfg, cache, kv, slot, max_seq)
+            tok0 = jnp.argmax(logits[0, :vocab]).astype(jnp.int32)
+            start = jnp.int32(1) if encdec else length
+            token = token.at[slot].set(tok0)
+            pos = pos.at[slot].set(start)
+            active = active.at[slot].set(True)
+            emitted = emitted.at[slot].set(1)
+            max_new = max_new.at[slot].set(req_max_new)
+            return cache, token, pos, active, emitted, max_new, tok0
+
+        return admit
 
     # -- request lifecycle ---------------------------------------------------
+
     def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
+
+    def _bucket_len(self, n: int) -> Optional[int]:
+        """Padded prompt length, or None for an exact-length prefill."""
+        if not self._pad_ok:
+            return None
+        cap = min(self.max_seq, self.cfg.window or self.max_seq)
+        if n > cap:
+            return None            # longer than the paddable window: exact
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, cap)
 
     def _admit(self):
         for i, slot in enumerate(self.slots):
             if slot.req is None and self.queue:
-                req = self.queue.pop(0)
-                logits, kv = registry.prefill(
-                    self.params, self.cfg, jnp.asarray(req.prompt)[None])
-                # scatter this request's prefill KV into pool slot i
-                self.cache = jax.tree.map(
-                    lambda pool, new: _write_slot(pool, new, i, self.max_seq),
-                    self.cache, kv)
-                tok = int(jnp.argmax(logits[0, :self.cfg.vocab]))
-                req.out_tokens.append(tok)
+                req = self.queue.popleft()
+                prompt = np.asarray(req.prompt)
+                n = len(prompt)
+                b = self._bucket_len(n)
+                if b is not None and b > n:
+                    pad = np.zeros((b - n,) + prompt.shape[1:], prompt.dtype)
+                    prompt = np.concatenate([prompt, pad])
+                self._prefill_shapes.add(prompt.shape)
+                with _quiet_donation():
+                    out = self._admit_fn(
+                        self.params, self.cache, self._token, self._pos,
+                        self._active, self._emitted, self._max_new,
+                        jnp.asarray(prompt), jnp.int32(n), jnp.int32(i),
+                        jnp.int32(req.max_new_tokens))
+                (self.cache, self._token, self._pos, self._active,
+                 self._emitted, self._max_new, tok0) = out
+                req.out_tokens.append(int(tok0))
+                req.t_first = time.perf_counter()
                 slot.req = req
-                slot.pos = len(req.prompt) if self.cfg.family != "encdec" \
-                    else 1
-                self._token = self._token.at[i].set(tok)
-                self._pos = self._pos.at[i].set(slot.pos)
+                slot.start = 1 if self.cfg.family == "encdec" else n
 
-    # -- one engine step -------------------------------------------------------
-    def step(self):
+    # -- one engine step -----------------------------------------------------
+
+    def _done_in_pending(self, slot: _Slot) -> bool:
+        """True when the slot's request finishes within the not-yet-applied
+        pending emit (the host can predict the device stop conditions from
+        its applied token count and start position)."""
+        req = slot.req
+        n_out = len(req.out_tokens)
+        return (n_out + 1 >= req.max_new_tokens
+                or slot.start + n_out >= self.max_seq - 1)
+
+    def step(self) -> bool:
+        if self._pending is not None and \
+                (self.queue and all(s.req is not None for s in self.slots)
+                 or all(s.req is None or self._done_in_pending(s)
+                        for s in self.slots)):
+            # Catch up on the pending emit when it can change what to do
+            # next: either its done flags may free slots for the waiting
+            # queue (admission timing then matches the host-driven engine
+            # under queue pressure), or EVERY occupied slot finishes inside
+            # it — dispatching before applying would burn one all-masked
+            # decode step at the tail of each run.
+            self._drain()
         self._admit()
-        if not any(s.req for s in self.slots):
-            return False
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self._token, self._pos)
-        next_tok = jnp.argmax(logits[:, :self.cfg.vocab], axis=-1) \
-            .astype(jnp.int32)
-        self._token = next_tok
-        self._pos = self._pos + 1
-        for i, slot in enumerate(self.slots):
-            if slot.req is None:
-                continue
-            slot.pos += 1
-            tok = int(next_tok[i])
-            slot.req.out_tokens.append(tok)
-            if (len(slot.req.out_tokens) >= slot.req.max_new_tokens
-                    or slot.pos >= self.max_seq - 1):
-                slot.req.done = True
-                self.finished.append(slot.req)
-                slot.req = None
+        if not any(s.req is not None for s in self.slots):
+            self._drain()
+            self._admit()
+            if not any(s.req is not None for s in self.slots):
+                return False
+        with _quiet_donation():
+            out = self._step_fn(self.params, self.cache, self._token,
+                                self._pos, self._active, self._emitted,
+                                self._max_new)
+        (self.cache, self._token, self._pos, self._active,
+         self._emitted, emit) = out
+        self._steps += 1
+        prev, self._pending = self._pending, (emit,
+                                              [s.req for s in self.slots])
+        if prev is not None:
+            self._apply(prev)           # readback of step k-1 overlaps k
         return True
 
+    def _drain(self):
+        if self._pending is not None:
+            prev, self._pending = self._pending, None
+            self._apply(prev)
+
+    def _apply(self, pending):
+        (emit_tok, done), reqs = pending
+        tok = np.asarray(emit_tok)
+        fin = np.asarray(done)
+        for i, req in enumerate(reqs):
+            if req is None or tok[i] < 0:
+                continue
+            req.out_tokens.append(int(tok[i]))
+            if fin[i]:
+                req.done = True
+                self.finished.append(req)
+                if self.slots[i].req is req:
+                    self.slots[i].req = None
+
     def run(self, max_steps: int = 10_000):
-        while (self.queue or any(s.req for s in self.slots)) \
-                and max_steps > 0:
-            self.step()
+        while max_steps > 0 and (self.queue or self._pending is not None
+                                 or any(s.req is not None
+                                        for s in self.slots)):
+            if not self.step():
+                break
             max_steps -= 1
+        self._drain()
         return self.finished
 
+    # -- introspection -------------------------------------------------------
 
-def _write_slot(pool, new, i, max_seq):
-    """Insert one request's prefill cache [L, 1, S, ...] into pool slot i."""
-    if pool.ndim != new.ndim or pool.shape[0] != new.shape[0]:
-        return pool  # non-KV leaves (recurrent states share layout below)
-    s = min(new.shape[2], max_seq) if new.ndim >= 3 else None
-    if new.ndim >= 3 and pool.shape[2] >= new.shape[2]:
-        return jax.lax.dynamic_update_slice_in_dim(
-            pool, new[:, :1, :s].astype(pool.dtype), i, axis=1)
-    if new.ndim >= 3:
-        return jax.lax.dynamic_update_slice_in_dim(
-            pool, new[:, :1, -pool.shape[2]:].astype(pool.dtype), i, axis=1)
-    return pool
+    def stats(self) -> dict:
+        """Decode steps, prefill retrace count, and bucket coverage."""
+        try:
+            prefill_compiles = self._admit_fn._cache_size()
+        except Exception:
+            prefill_compiles = len(self._prefill_shapes)
+        return {
+            "steps": self._steps,
+            "prefill_compiles": int(prefill_compiles),
+            "prefill_shapes": sorted(s[0] for s in self._prefill_shapes),
+            "pad_prefill": self._pad_ok,
+            "slots": self.n_slots,
+        }

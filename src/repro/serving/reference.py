@@ -1,0 +1,107 @@
+"""Host-driven reference engine — the historical (pre-device-resident)
+continuous-batching loop, kept verbatim as the equivalence oracle.
+
+``Engine`` (repro.serving.engine) must produce bit-identical per-request
+token streams to this implementation on any request mix; that invariant is
+asserted by ``tests/test_serving.py`` and by
+``benchmarks/serve_bench.py --check``. Every per-token pathology the new
+engine removes is still here on purpose: un-jitted host argmax, one
+blocking ``int(next_tok[i])`` readback per slot per step, an eager
+per-request cache scatter, and one prefill compile per unique prompt
+length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.serving.engine import Request, _Slot
+
+
+class ReferenceEngine:
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 max_seq: int = 512, greedy: bool = True):
+        self.params, self.cfg = params, cfg
+        self.n_slots, self.max_seq = slots, max_seq
+        self.slots = [_Slot() for _ in range(slots)]
+        self._pos_host = [0] * slots
+        self.cache, _ = registry.init_cache(cfg, slots, max_seq)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: registry.decode_step(p, cfg, c, t, pos))
+        self._token = jnp.zeros((slots,), jnp.int32)
+        self._pos = jnp.zeros((slots,), jnp.int32)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot.req is None and self.queue:
+                req = self.queue.pop(0)
+                logits, kv = registry.prefill(
+                    self.params, self.cfg, jnp.asarray(req.prompt)[None])
+                # scatter this request's prefill KV into pool slot i
+                self.cache = jax.tree.map(
+                    lambda pool, new: _write_slot(pool, new, i, self.max_seq),
+                    self.cache, kv)
+                tok = int(jnp.argmax(logits[0, :self.cfg.vocab]))
+                req.out_tokens.append(tok)
+                slot.req = req
+                self._pos_host[i] = len(req.prompt) \
+                    if self.cfg.family != "encdec" else 1
+                self._token = self._token.at[i].set(tok)
+                self._pos = self._pos.at[i].set(self._pos_host[i])
+
+    def step(self):
+        self._admit()
+        if not any(s.req for s in self.slots):
+            return False
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self._token, self._pos)
+        next_tok = jnp.argmax(logits[:, :self.cfg.vocab], axis=-1) \
+            .astype(jnp.int32)
+        self._token = next_tok
+        self._pos = self._pos + 1
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue
+            self._pos_host[i] += 1
+            tok = int(next_tok[i])
+            slot.req.out_tokens.append(tok)
+            if (len(slot.req.out_tokens) >= slot.req.max_new_tokens
+                    or self._pos_host[i] >= self.max_seq - 1):
+                slot.req.done = True
+                self.finished.append(slot.req)
+                slot.req = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        while (self.queue or any(s.req for s in self.slots)) \
+                and max_steps > 0:
+            self.step()
+            max_steps -= 1
+        return self.finished
+
+
+def _write_slot(pool, new, i, max_seq):
+    """Insert one request's prefill cache [L, 1, S, ...] into pool slot i.
+
+    Correct for families whose cache batch axis is axis 1 (dense / MoE /
+    enc-dec); the device-resident engine replaces this with the axes-aware
+    ``registry.write_slot``.
+    """
+    if pool.ndim != new.ndim or pool.shape[0] != new.shape[0]:
+        return pool  # non-KV leaves (recurrent states share layout below)
+    s = min(new.shape[2], max_seq) if new.ndim >= 3 else None
+    if new.ndim >= 3 and pool.shape[2] >= new.shape[2]:
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool, new[:, :1, :s].astype(pool.dtype), i, axis=1)
+    if new.ndim >= 3:
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool, new[:, :1, -pool.shape[2]:].astype(pool.dtype), i, axis=1)
+    return pool

@@ -184,6 +184,58 @@ def test_oracle_outputs_memoized_per_suite():
     assert computed3                                 # new suite, new oracle
 
 
+def test_oracle_locking_is_per_key_not_global():
+    """A slow oracle run for one kernel must not serialize concurrent
+    oracle computation for a DIFFERENT kernel (the lock is per
+    (kernel, digest), not the global memo lock), while racing evaluators
+    of the same key still compute exactly once."""
+    started = threading.Event()
+    release = threading.Event()
+    calls = {"slow": 0, "fast": 0}
+    count_lock = threading.Lock()
+
+    def slow_oracle(*a):
+        with count_lock:
+            calls["slow"] += 1
+        started.set()
+        assert release.wait(timeout=10), "fast oracle never unblocked us"
+        return jnp.zeros(2)
+
+    def fast_oracle(*a):
+        with count_lock:
+            calls["fast"] += 1
+        return jnp.ones(2)
+
+    slow, slow_tests = toy_space("toy_lock_slow", n_tests=1)
+    fast, fast_tests = toy_space("toy_lock_fast", n_tests=1)
+    slow = dataclasses.replace(slow, oracle=slow_oracle)
+    fast = dataclasses.replace(fast, oracle=fast_oracle)
+
+    results = {}
+
+    def run_slow():
+        results["slow"] = oracle_outputs(slow, slow_tests, digest="dl")
+
+    def run_fast():
+        started.wait(timeout=10)
+        # the slow kernel is mid-oracle: a different key must proceed
+        results["fast"] = oracle_outputs(fast, fast_tests, digest="df")
+        release.set()
+
+    threads = [threading.Thread(target=run_slow),
+               threading.Thread(target=run_fast)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=20)
+    assert not any(t.is_alive() for t in threads), \
+        "per-key locking deadlocked/serialized across kernels"
+    assert results["slow"][1] and results["fast"][1]
+    # racing duplicates of the SAME key still compute once
+    _, computed = oracle_outputs(slow, slow_tests, digest="dl")
+    assert not computed and calls == {"slow": 1, "fast": 1}
+
+
 def test_suite_tests_memoized_per_kernel_and_agent():
     clear_suite_memos()
     space = get_space("silu_and_mul")

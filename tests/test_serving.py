@@ -1,0 +1,124 @@
+"""Serving-engine tests: bit-identical token streams vs the host-driven
+(pre-refactor) reference engine, slot recycling under ragged admission,
+the pow2 prefill retrace bound, and an engine smoke across all five model
+families (whose cache layouts all differ — the scatter is axes-driven)."""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import registry
+from repro.serving.engine import Engine, Request
+from repro.serving.reference import ReferenceEngine
+
+FAMILY_ARCHS = {
+    "dense": "qwen2-0.5b",
+    "moe": "olmoe-1b-7b",
+    "xlstm": "xlstm-1.3b",
+    "hybrid": "recurrentgemma-2b",
+    "encdec": "seamless-m4t-large-v2",
+}
+
+_PARAMS = {}
+
+
+def _setup(arch):
+    if arch not in _PARAMS:
+        cfg = configs.smoke(arch)
+        _PARAMS[arch] = (cfg, registry.init(cfg, jax.random.PRNGKey(0))[0])
+    return _PARAMS[arch]
+
+
+def _requests(cfg, lens, *, max_new=5, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for rid, n in enumerate(lens):
+        if cfg.frontend == "frames":
+            prompt = rng.standard_normal((n, cfg.d_model)).astype(np.float32)
+        else:
+            prompt = rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
+        out.append(Request(rid=rid, prompt=prompt, max_new_tokens=max_new))
+    return out
+
+
+def _streams(engine_cls, cfg, params, lens, **kw):
+    eng = engine_cls(params, cfg, slots=kw.pop("slots", 3),
+                     max_seq=kw.pop("max_seq", 64))
+    for r in _requests(cfg, lens, **kw):
+        eng.submit(r)
+    done = eng.run()
+    return {r.rid: list(r.out_tokens) for r in done}, eng
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "olmoe-1b-7b"])
+def test_bit_identical_streams(arch):
+    """Device-resident engine == host-driven engine, token for token, on a
+    fixed ragged mix — covering the bucketed-pad prefill path (dense) and
+    the exact-length path with slot-coupled MoE routing."""
+    cfg, params = _setup(arch)
+    lens = [3, 5, 7, 9, 11, 4, 6, 13] if cfg.family == "dense" \
+        else [4, 6, 9, 5, 7]
+    new, _ = _streams(Engine, cfg, params, lens)
+    ref, _ = _streams(ReferenceEngine, cfg, params, lens)
+    assert new == ref
+    assert len(new) == len(lens)
+
+
+def test_max_seq_stop_matches_reference():
+    """The on-device max-seq stop condition fires at the same token index
+    as the host engine's."""
+    cfg, params = _setup("qwen2-0.5b")
+    new, _ = _streams(Engine, cfg, params, [4, 6], max_new=1000,
+                      slots=2, max_seq=16)
+    ref, _ = _streams(ReferenceEngine, cfg, params, [4, 6], max_new=1000,
+                      slots=2, max_seq=16)
+    assert new == ref
+    assert all(len(v) > 1 for v in new.values())
+
+
+def test_slot_recycling_ragged():
+    """More requests than slots with ragged prompt lengths: every request
+    completes with exactly max_new tokens through recycled slots."""
+    cfg, params = _setup("qwen2-0.5b")
+    lens = [3, 9, 5, 12, 4, 7, 15, 6, 10]
+    new, eng = _streams(Engine, cfg, params, lens, max_new=4, slots=2)
+    assert sorted(new) == list(range(len(lens)))
+    assert all(len(v) == 4 for v in new.values())
+    assert all(0 <= t < cfg.vocab for v in new.values() for t in v)
+    assert not eng.queue and all(s.req is None for s in eng.slots)
+
+
+def test_prefill_retrace_bound():
+    """8+ distinct prompt lengths must trigger no more prefill compiles
+    than the number of pow2 buckets (<= log2(max_seq)+1), strictly fewer
+    than the per-unique-length behavior of the host engine."""
+    cfg, params = _setup("qwen2-0.5b")
+    lens = [3, 4, 5, 7, 9, 12, 17, 23, 29, 31]
+    assert len(set(lens)) >= 8
+    max_seq = 64
+    new, eng = _streams(Engine, cfg, params, lens, max_new=3, slots=3,
+                        max_seq=max_seq)
+    stats = eng.stats()
+    buckets = {1 << max(0, (n - 1).bit_length()) for n in lens}
+    assert stats["pad_prefill"]
+    assert stats["prefill_compiles"] <= len(buckets)
+    assert stats["prefill_compiles"] <= int(math.log2(max_seq)) + 1
+    assert stats["prefill_compiles"] < len(set(lens))
+    assert len(new) == len(lens)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_engine_smoke_all_families(family):
+    """Admission scatter + pooled decode across every cache layout:
+    positional KV (dense), exact-prefill KV (moe), stacked recurrent
+    states (xlstm), mixed KV/recurrent/conv (hybrid), dual self+cross KV
+    (encdec)."""
+    cfg, params = _setup(FAMILY_ARCHS[family])
+    new, eng = _streams(Engine, cfg, params, [5, 8, 6], max_new=3, slots=2)
+    assert sorted(new) == [0, 1, 2]
+    assert all(len(v) == 3 for v in new.values())
+    assert all(0 <= t < cfg.vocab for v in new.values() for t in v)
+    assert eng.stats()["steps"] > 0
