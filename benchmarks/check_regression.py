@@ -1,0 +1,161 @@
+"""Bench-regression CI gate: compare the current ``bench.json`` against the
+committed ``benchmarks/baseline.json`` and exit non-zero on regression.
+
+Gated metrics, chosen for CI-runner robustness:
+
+* **Kernel speedups** (and the geomean) are analytic cost-model ratios —
+  deterministic across hosts — so they get a tight tolerance
+  (``--kernel-tol``, default 10%). ``correct`` must stay True.
+* **Serving tokens/s** is wall clock on a shared runner, so it gets a loose
+  tolerance (``--serving-tol``, default 60%: a >2.5x slowdown fails; the
+  CI workflow widens it to 0.85 because the committed baseline was
+  recorded on a dev-class host). The *deterministic* serving counters —
+  decode ``steps``, ``prefill_compiles`` (retrace explosions),
+  ``preemptions`` (paged-pool behavior drift) — are compared exactly,
+  which is where real regressions show up first.
+
+Usage:
+    python benchmarks/run.py --json --rounds 2        # writes bench.json
+    python benchmarks/check_regression.py             # gate
+    python benchmarks/check_regression.py --update    # refresh baseline
+
+The baseline is refreshed *in the PR that changes the numbers* (with the
+same ``--rounds`` the CI uses), so the diff shows the perf delta being
+signed off.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BENCH_JSON = os.path.join(HERE, "artifacts", "bench.json")
+BASELINE = os.path.join(HERE, "baseline.json")
+
+# serving counters that must match the baseline exactly (deterministic for
+# a fixed seed; a change means the engine's behavior changed, not the host)
+EXACT_SERVING = ("steps", "prefill_compiles", "preemptions")
+
+
+def _serving_key(row: dict) -> str:
+    return f"{row['arch']}/{row['mix']}/{row.get('engine', 'device')}"
+
+
+def extract(bench: dict) -> dict:
+    """Slim the gated metrics out of a full bench.json payload."""
+    out = {"kernels": {}, "geomean_speedup": round(
+        bench.get("geomean_speedup", 0.0), 4), "serving": {}}
+    for k in bench.get("kernels", []):
+        out["kernels"][k["kernel"]] = {
+            "speedup": round(k["speedup"], 4),
+            "correct": bool(k["correct"]),
+        }
+    for row in bench.get("serving", []):
+        if row.get("engine", "device") != "device":
+            continue            # reference rows exist only under --compare
+        slim = {"tok_per_s": round(row["tok_per_s"], 2)}
+        for key in EXACT_SERVING:
+            if row.get(key) is not None:
+                slim[key] = int(row[key])
+        out["serving"][_serving_key(row)] = slim
+    return out
+
+
+def compare(current: dict, baseline: dict, *, kernel_tol: float,
+            serving_tol: float, exact: bool = True) -> list[str]:
+    """Returns a list of human-readable regression messages (empty = pass)."""
+    bad = []
+    for name, base in baseline.get("kernels", {}).items():
+        cur = current["kernels"].get(name)
+        if cur is None:
+            bad.append(f"kernel {name}: missing from bench.json "
+                       f"(baseline speedup {base['speedup']:.2f}x)")
+            continue
+        if base["correct"] and not cur["correct"]:
+            bad.append(f"kernel {name}: optimized variant went INCORRECT")
+        floor = base["speedup"] * (1.0 - kernel_tol)
+        if cur["speedup"] < floor:
+            bad.append(f"kernel {name}: speedup {cur['speedup']:.3f}x < "
+                       f"{floor:.3f}x (baseline {base['speedup']:.3f}x "
+                       f"- {kernel_tol:.0%})")
+    gbase = baseline.get("geomean_speedup")
+    if gbase and current["geomean_speedup"] < gbase * (1.0 - kernel_tol):
+        bad.append(f"geomean speedup {current['geomean_speedup']:.3f}x < "
+                   f"baseline {gbase:.3f}x - {kernel_tol:.0%}")
+    for key, base in baseline.get("serving", {}).items():
+        cur = current["serving"].get(key)
+        if cur is None:
+            bad.append(f"serving {key}: missing from bench.json")
+            continue
+        floor = base["tok_per_s"] * (1.0 - serving_tol)
+        if cur["tok_per_s"] < floor:
+            bad.append(f"serving {key}: {cur['tok_per_s']:.1f} tok/s < "
+                       f"{floor:.1f} (baseline {base['tok_per_s']:.1f} "
+                       f"- {serving_tol:.0%})")
+        if exact:
+            for field in EXACT_SERVING:
+                if field in base and base[field] != cur.get(field):
+                    bad.append(f"serving {key}: {field} changed "
+                               f"{base[field]} -> {cur.get(field)} "
+                               f"(deterministic counter; if intended, "
+                               f"refresh baseline.json)")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default=BENCH_JSON)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--kernel-tol", type=float, default=0.10,
+                    help="relative drop allowed on (deterministic, "
+                         "cost-model) kernel speedups")
+    ap.add_argument("--serving-tol", type=float, default=0.60,
+                    help="relative drop allowed on (wall-clock, noisy) "
+                         "serving tokens/s")
+    ap.add_argument("--no-exact", action="store_true",
+                    help="skip the exact serving-counter comparison")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current bench.json")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.bench):
+        print(f"# no bench.json at {args.bench}; run "
+              "`python benchmarks/run.py --json` first", file=sys.stderr)
+        return 2
+    current = extract(json.load(open(args.bench)))
+
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# baseline refreshed -> {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        # a missing baseline must FAIL (otherwise deleting it disables the
+        # gate silently) — refresh + commit it instead
+        print(f"# BASELINE MISSING: {args.baseline} "
+              "(run with --update and commit it)", file=sys.stderr)
+        return 2
+
+    baseline = json.load(open(args.baseline))
+    bad = compare(current, baseline, kernel_tol=args.kernel_tol,
+                  serving_tol=args.serving_tol, exact=not args.no_exact)
+    n_gates = (len(baseline.get("kernels", {}))
+               + len(baseline.get("serving", {})) + 1)
+    if bad:
+        print(f"# BENCH REGRESSION ({len(bad)} of {n_gates} gates):")
+        for msg in bad:
+            print(f"#   {msg}")
+        return 1
+    print(f"# bench-regression gate: {n_gates} gates pass "
+          f"(kernel tol {args.kernel_tol:.0%}, "
+          f"serving tol {args.serving_tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

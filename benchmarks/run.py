@@ -229,9 +229,9 @@ def bench_json(results=None, *, strategy="greedy", rounds: int = 5,
     for k in kernels:
         for key, v in k["stages"].items():
             stage_totals[key] = stage_totals.get(key, 0) + v
-    if serving is None:   # standalone bench_json: one representative cell
+    if serving is None:   # standalone bench_json: representative cells
         serving = serving_bench(csv=False, archs=("qwen2-0.5b",),
-                                mixes=("ragged_burst",))
+                                mixes=("ragged_burst", "oversubscribed"))
     payload = {"kernels": kernels, "geomean_speedup": geo,
                "stage_totals": stage_totals, "serving": serving}
     os.makedirs(os.path.dirname(path), exist_ok=True)

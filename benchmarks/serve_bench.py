@@ -13,8 +13,13 @@ engine) over several request mixes and reports, per (arch, mix, engine):
 
 Mixes: ``uniform_short`` (one short length), ``long_tail`` (mostly short,
 a few near-window prompts), ``ragged_burst`` (8+ distinct lengths arriving
-at once). Wall times on this host are CPU numbers — a functional serving
-benchmark, not a TPU projection.
+at once), ``oversubscribed`` (long prompts x long generations whose total
+token demand exceeds a deliberately undersized page pool — the paged
+engine must admit by actual token count, grow slots page-by-page, and
+preempt/swap the youngest occupant when the pool runs dry; rows then also
+report ``preemptions`` and page utilization/fragmentation). Wall times on
+this host are CPU numbers — a functional serving benchmark, not a TPU
+projection.
 
     PYTHONPATH=src python benchmarks/serve_bench.py                # bench
     PYTHONPATH=src python benchmarks/serve_bench.py --compare      # + ref
@@ -57,16 +62,32 @@ def _mix_lengths(mix: str, rng) -> list[int]:
         while len(set(lens)) < 8:
             lens.append(int(rng.integers(4, 41)))
         return lens
+    if mix == "oversubscribed":
+        # long-prompt burst: total demand (prompt + generation rounded up
+        # to whole pages) far exceeds OVERSUB_PAGES * PAGE_SIZE rows, so a
+        # paged engine must oversubscribe and preempt
+        return [int(n) for n in rng.integers(40, 81, 10)]
     raise KeyError(f"unknown mix {mix!r}; have {sorted(MIXES)}")
 
 
-MIXES = ("uniform_short", "long_tail", "ragged_burst")
+MIXES = ("uniform_short", "long_tail", "ragged_burst", "oversubscribed")
+
+# paged-pool geometry for the oversubscribed mix: 4 slots x 128 max_seq
+# would fully subscribe 32 pages of 16; 12 pages force admission queueing
+# and mid-decode preemption (the contiguous fallback of non-PAGED_OK
+# families simply ignores these knobs)
+PAGE_SIZE, OVERSUB_PAGES = 16, 12
+MIX_ENGINE_KW = {"oversubscribed": {"page_size": PAGE_SIZE,
+                                    "num_pages": OVERSUB_PAGES}}
+MIX_MAX_NEW = {"oversubscribed": 24}
 
 
 def build_requests(cfg, mix: str, *, seed: int = SEED,
-                   max_new: int = MAX_NEW):
+                   max_new: int = None):
     """Deterministic request list for (cfg, mix, seed)."""
     from repro.serving.engine import Request
+    if max_new is None:
+        max_new = MIX_MAX_NEW.get(mix, MAX_NEW)
     rng = np.random.default_rng(seed)
     reqs = []
     for rid, n in enumerate(_mix_lengths(mix, rng)):
@@ -89,7 +110,7 @@ def run_engine(engine, requests) -> dict:
     ttfts = [r.t_first - r.t_submit for r in done
              if getattr(r, "t_first", 0) and getattr(r, "t_submit", 0)]
     stats = engine.stats() if hasattr(engine, "stats") else {}
-    return {
+    row = {
         "requests": len(done),
         "tokens": toks,
         "wall_s": wall,
@@ -97,8 +118,19 @@ def run_engine(engine, requests) -> dict:
         "ttft_ms": float(np.mean(ttfts)) * 1e3 if ttfts else None,
         "steps": stats.get("steps"),
         "prefill_compiles": stats.get("prefill_compiles"),
+        "paged": stats.get("paged", False),
+        "preemptions": stats.get("preemptions", 0),
         "streams": {r.rid: list(r.out_tokens) for r in done},
     }
+    if stats.get("paged"):
+        row.update({
+            "page_size": stats["page_size"],
+            "num_pages": stats["num_pages"],
+            "peak_pages_in_use": stats["peak_pages_in_use"],
+            "page_util_mean": round(stats["page_util_mean"], 4),
+            "page_frag_mean": round(stats["page_frag_mean"], 4),
+        })
+    return row
 
 
 def reference_rows(arch: str, mixes=MIXES, *, seed: int = SEED) -> list[dict]:
@@ -163,7 +195,8 @@ def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
     for mix in mixes:
         rows.append({"arch": arch, "mix": mix, "engine": "device",
                      **run_engine(Engine(params, cfg, slots=SLOTS,
-                                         max_seq=MAX_SEQ),
+                                         max_seq=MAX_SEQ,
+                                         **MIX_ENGINE_KW.get(mix, {})),
                                   build_requests(cfg, mix, seed=seed))})
     if compare or check:
         refs = {r["mix"]: r for r in
@@ -196,7 +229,9 @@ def check_golden(rows, *, record: bool = False) -> bool:
             with open(path, "w") as f:
                 json.dump({"arch": row["arch"], "mix": row["mix"],
                            "seed": SEED, "slots": SLOTS, "max_seq": MAX_SEQ,
-                           "max_new": MAX_NEW, "streams": streams}, f,
+                           "max_new": MIX_MAX_NEW.get(row["mix"], MAX_NEW),
+                           "engine_kw": MIX_ENGINE_KW.get(row["mix"], {}),
+                           "streams": streams}, f,
                           indent=1, sort_keys=True)
             print(f"# golden recorded -> {path}")
             continue
@@ -227,10 +262,15 @@ def print_rows(rows):
             extra = (f",speedup={r['speedup_vs_reference']:.2f}x,"
                      f"match={r['streams_match_reference']}")
         ttft = f"{r['ttft_ms']:.0f}" if r.get("ttft_ms") is not None else "na"
+        paged = ""
+        if r.get("paged"):
+            paged = (f",preempt={r['preemptions']},"
+                     f"pages={r['peak_pages_in_use']}/{r['num_pages']},"
+                     f"frag={r['page_frag_mean']:.2f}")
         print(f"serving/{r['arch']}/{r['mix']}/{r['engine']},{us:.0f},"
               f"tok_s={r['tok_per_s']:.1f},ttft_ms={ttft},"
               f"steps={r['steps']},"
-              f"prefill_compiles={r['prefill_compiles']}{extra}")
+              f"prefill_compiles={r['prefill_compiles']}{paged}{extra}")
 
 
 def bench(archs=DEFAULT_ARCHS, mixes=MIXES, *, compare: bool = False,

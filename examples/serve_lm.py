@@ -2,10 +2,19 @@
 continuous-batching engine: one donated jit-ed step per decode token
 (model forward + greedy sampling + stop conditions on device, overlapped
 host readback), bucketed pow2 prefill admission, and the flash-decode
-kernel (paper Kernel 1's merge) on the attention path.
+kernel (paper Kernel 1's merge, paged form) on the attention path.
+
+The second run oversubscribes the paged KV pool (8 pages x 16 rows vs
+3 slots x 128 positions), so admission queues on free pages and the
+engine preempts + swaps the youngest occupant — the printed stats show
+preemptions and page utilization/fragmentation.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
 from repro.launch.serve import run
 
 run(arch="qwen2-0.5b", requests=6, slots=3, max_new=8, max_seq=128)
+
+print("\n--- oversubscribed paged pool ---")
+run(arch="qwen2-0.5b", requests=8, slots=3, max_new=24, max_seq=128,
+    prompt_len=48, num_pages=8)

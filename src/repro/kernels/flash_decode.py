@@ -22,6 +22,17 @@ Variant knobs (the space Astra searches):
   * ``use_reciprocal`` — final normalize via rcp+mul vs divide.
   * ``mask_oob``     — predicate chunks entirely past ``kv_len`` (skip work)
     vs masking every score (baseline reads + masks everything).
+
+**Paged form** (``paged_flash_decode_attention``): the production layout of
+this kernel in a paged-KV serving engine. K/V live in a global page pool
+``[num_pages, page_size, kv_heads, head_dim]`` shared by all requests; a
+per-request page table maps logical page ``j`` to its physical page.  The
+grid's sequential axis walks *logical* pages and the K/V BlockSpec
+index_maps read the scalar-prefetched page table to DMA the right physical
+block — the same online-softmax carry, with the gather folded into the
+block fetch.  ``page_size`` is a search knob of its own registered space
+(``paged_flash_decode``): it sets both the pool granule the serving engine
+allocates in and this kernel's per-step working set.
 """
 
 from __future__ import annotations
@@ -59,6 +70,49 @@ OPTIMIZED = FlashDecodeVariant(name="astra_opt", chunk=1024,
                                use_reciprocal=True, mask_oob=True)
 
 
+def _init_carry(acc_ref, m_ref, l_ref):
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+
+def _online_softmax_step(q, k, v, acc_ref, m_ref, l_ref, *,
+                         pos0, kv_len, sm_scale):
+    """One chunk of the running online-softmax merge. ``pos0`` is the
+    absolute KV position of this chunk's first row (rows >= kv_len are
+    masked)."""
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * sm_scale   # [G, C]
+    # mask positions >= kv_len within this chunk
+    pos = pos0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[...][:, :1]                    # [G, 1]
+    l_prev = l_ref[...][:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)    # [G, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    # merge_attn_states_lse math: rescale old accumulator, add new chunk
+    alpha = jnp.exp(m_prev - m_new)               # e^{S_a - m}
+    p = jnp.exp(s - m_new)                        # [G, C]
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+
+def _finalize_output(o_ref, acc_ref, l_ref, *, use_reciprocal):
+    l = l_ref[...][:, :1]
+    if use_reciprocal:
+        inv = jnp.where(l > 0, _common.reciprocal(l, approx=False), 0.0)
+        o_ref[0] = (acc_ref[...] * inv).astype(o_ref.dtype)
+    else:
+        safe_l = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
             acc_ref, m_ref, l_ref, *,
             chunk, sm_scale, use_reciprocal, mask_oob):
@@ -68,34 +122,15 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(j == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        _init_carry(acc_ref, m_ref, l_ref)
 
     def _step():
-        q = q_ref[0].astype(jnp.float32)              # [G, D]
-        k = k_ref[0].astype(jnp.float32)              # [C, D]
-        v = v_ref[0].astype(jnp.float32)              # [C, D]
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * sm_scale   # [G, C]
-        # mask positions >= kv_len within this chunk
-        pos = j * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(pos < kv_len, s, NEG_INF)
-
-        m_prev = m_ref[...][:, :1]                    # [G, 1]
-        l_prev = l_ref[...][:, :1]
-        m_cur = jnp.max(s, axis=-1, keepdims=True)    # [G, 1]
-        m_new = jnp.maximum(m_prev, m_cur)
-        # merge_attn_states_lse math: rescale old accumulator, add new chunk
-        alpha = jnp.exp(m_prev - m_new)               # e^{S_a - m}
-        p = jnp.exp(s - m_new)                        # [G, C]
-        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        _online_softmax_step(
+            q_ref[0].astype(jnp.float32),             # [G, D]
+            k_ref[0].astype(jnp.float32),             # [C, D]
+            v_ref[0].astype(jnp.float32),             # [C, D]
+            acc_ref, m_ref, l_ref,
+            pos0=j * chunk, kv_len=kv_len, sm_scale=sm_scale)
 
     if mask_oob:
         # Optimized: skip chunks entirely past kv_len (saves the matmul+exp).
@@ -105,13 +140,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(j == n_chunks - 1)
     def _finalize():
-        l = l_ref[...][:, :1]
-        if use_reciprocal:
-            inv = jnp.where(l > 0, _common.reciprocal(l, approx=False), 0.0)
-            o_ref[0] = (acc_ref[...] * inv).astype(o_ref.dtype)
-        else:
-            safe_l = jnp.where(l > 0, l, 1.0)
-            o_ref[0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+        _finalize_output(o_ref, acc_ref, l_ref, use_reciprocal=use_reciprocal)
 
 
 def flash_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -292,5 +321,216 @@ def _space() -> KernelSpace:
             Knob("use_reciprocal", "bool", attacks=("compute",), target=True),
         ),
         suite_shapes=SUITE_SHAPES,
+        make_inputs=make_inputs,
+    )
+
+
+# ==========================================================================
+# Paged variant — K/V gathered through a page table (paged-KV serving form)
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class PagedFlashDecodeVariant:
+    """Knobs of the paged kernel. ``page_size`` is the pool granule: the
+    serving engine allocates KV in ``page_size``-row pages and this kernel
+    processes one page per sequential grid step (the paged analogue of
+    ``chunk``). At apply time the kernel reads the page size off the pool's
+    shape; the knob steers the *search*, whose verdict sizes the pool."""
+    name: str = "baseline"
+    page_size: int = 16
+    use_reciprocal: bool = False
+    mask_oob: bool = False
+
+    def describe(self) -> str:
+        return (f"{self.name}: page_size={self.page_size} "
+                f"rcp={self.use_reciprocal} mask_oob={self.mask_oob}")
+
+
+PAGED_BASELINE = PagedFlashDecodeVariant()
+PAGED_OPTIMIZED = PagedFlashDecodeVariant(name="astra_opt", page_size=64,
+                                          use_reciprocal=True, mask_oob=True)
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *,
+                  page, hkv, sm_scale, use_reciprocal, mask_oob):
+    i = pl.program_id(0)                  # batch * kv_head
+    j = pl.program_id(1)                  # LOGICAL page index
+    n_pages = pl.num_programs(1)
+    kv_len = len_ref[i // hkv]
+
+    @pl.when(j == 0)
+    def _init():
+        _init_carry(acc_ref, m_ref, l_ref)
+
+    def _step():
+        _online_softmax_step(
+            q_ref[0].astype(jnp.float32),
+            k_ref[0, 0].astype(jnp.float32),          # [page, D]
+            v_ref[0, 0].astype(jnp.float32),
+            acc_ref, m_ref, l_ref,
+            pos0=j * page, kv_len=kv_len, sm_scale=sm_scale)
+
+    if mask_oob:
+        # skip logical pages entirely past kv_len (their physical blocks
+        # may belong to other requests — never read, never computed)
+        pl.when(j * page < kv_len)(_step)
+    else:
+        _step()
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        _finalize_output(o_ref, acc_ref, l_ref, use_reciprocal=use_reciprocal)
+
+
+def paged_flash_decode_attention(q: jax.Array, k_pages: jax.Array,
+                                 v_pages: jax.Array, page_table: jax.Array, *,
+                                 kv_len: jax.Array | None = None,
+                                 sm_scale: float | None = None,
+                                 variant: PagedFlashDecodeVariant
+                                 = PAGED_OPTIMIZED,
+                                 interpret: bool = False):
+    """Single-token GQA decode attention over a paged KV pool.
+
+    Args:
+      q: ``[batch, q_heads, head_dim]``.
+      k_pages, v_pages: ``[num_pages, page_size, kv_heads, head_dim]``
+        global block pool (shared by every request).
+      page_table: ``[batch, pages_per_seq]`` int32 — logical page ``j`` of
+        request ``b`` lives in physical page ``page_table[b, j]``.
+      kv_len: ``[batch]`` int32 valid lengths (default: the full table).
+
+    Returns ``[batch, q_heads, head_dim]``; bitwise it computes attention
+    over the gathered cache ``k_pages[page_table]`` — table entries at or
+    past ``kv_len`` may point anywhere valid (the engine points them at a
+    trap page) and are fully masked.
+    """
+    b, hq, dh = q.shape
+    _, page, hkv, _ = k_pages.shape
+    n_pt = page_table.shape[1]
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (dh ** 0.5)
+    if kv_len is None:
+        kv_len = jnp.full((b,), n_pt * page, jnp.int32)
+
+    g_pad = round_up(group, 8)
+    q4 = q.reshape(b, hkv, group, dh)
+    if g_pad != group:
+        q4 = jnp.pad(q4, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+    q3 = q4.reshape(b * hkv, g_pad, dh)
+    # [P, hkv, page, dh]: one (physical page, head) pair per block fetch
+    k4 = jnp.swapaxes(k_pages, 1, 2)
+    v4 = jnp.swapaxes(v_pages, 1, 2)
+    flat_pt = page_table.reshape(-1).astype(jnp.int32)   # [b * n_pt]
+
+    kern = functools.partial(
+        _paged_kernel, page=page, hkv=hkv, sm_scale=sm_scale,
+        use_reciprocal=variant.use_reciprocal, mask_oob=variant.mask_oob)
+
+    def kv_map(i, j, pt_ref, len_ref):
+        # gather through the scalar-prefetched table: logical page j of
+        # request i // hkv -> physical block index
+        return (pt_ref[(i // hkv) * n_pt + j], i % hkv, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # page table + kv_len
+        grid=(b * hkv, n_pt),
+        in_specs=[
+            pl.BlockSpec((1, g_pad, dh), lambda i, j, pt, ln: (i, 0, 0)),
+            pl.BlockSpec((1, 1, page, dh), kv_map),
+            pl.BlockSpec((1, 1, page, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, g_pad, dh), lambda i, j, pt, ln: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, dh), jnp.float32),
+            pltpu.VMEM((g_pad, 128), jnp.float32),
+            pltpu.VMEM((g_pad, 128), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, dh), q.dtype),
+        compiler_params=_common.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(flat_pt, kv_len.astype(jnp.int32), q3, k4, v4)
+
+    return out.reshape(b, hkv, g_pad, dh)[:, :, :group].reshape(b, hq, dh)
+
+
+def paged_cost(variant: PagedFlashDecodeVariant, *, batch: int, q_heads: int,
+               kv_heads: int, head_dim: int, seq: int, dtype,
+               mean_kv_len: float | None = None):
+    """Analytic cost: the split-KV cost at chunk=page_size plus the page
+    table reads (SMEM-prefetched, but they still cross HBM once)."""
+    proxy = FlashDecodeVariant(chunk=variant.page_size,
+                               use_reciprocal=variant.use_reciprocal,
+                               mask_oob=variant.mask_oob)
+    c = cost(proxy, batch=batch, q_heads=q_heads, kv_heads=kv_heads,
+             head_dim=head_dim, seq=seq, dtype=dtype,
+             mean_kv_len=mean_kv_len)
+    n_pt = round_up(seq, variant.page_size) // variant.page_size
+    c = dataclasses.replace(c, hbm_bytes=c.hbm_bytes + batch * n_pt * 4)
+    c.validate()
+    return c
+
+
+def _page_kv(k, v, page: int):
+    """Pack a contiguous ``[b, s, hkv, d]`` cache into a shuffled physical
+    pool + page table (the search harness's stand-in for the engine's
+    allocator — a fixed permutation so the gather path is really exercised).
+    """
+    import numpy as np
+    b, s, hkv, dh = k.shape
+    s_pad = round_up(s, page)
+    if s_pad != s:
+        padw = ((0, 0), (0, s_pad - s), (0, 0), (0, 0))
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+    n_pt = s_pad // page
+    perm = jnp.asarray(np.random.default_rng(17).permutation(b * n_pt),
+                       jnp.int32)
+    k_flat = k.reshape(b * n_pt, page, hkv, dh)
+    v_flat = v.reshape(b * n_pt, page, hkv, dh)
+    k_pages = jnp.zeros_like(k_flat).at[perm].set(k_flat)
+    v_pages = jnp.zeros_like(v_flat).at[perm].set(v_flat)
+    return k_pages, v_pages, perm.reshape(b, n_pt)
+
+
+def _paged_run(variant, q, k, v, kv_len, *, interpret=True):
+    page = min(variant.page_size, round_up(k.shape[1], 8))
+    k_pages, v_pages, table = _page_kv(k, v, page)
+    return paged_flash_decode_attention(q, k_pages, v_pages, table,
+                                        kv_len=kv_len, variant=variant,
+                                        interpret=interpret)
+
+
+PAGED_SUITE_SHAPES = (
+    {"batch": 2, "q_heads": 8, "kv_heads": 2, "head_dim": 64, "seq": 256},
+    {"batch": 4, "q_heads": 4, "kv_heads": 4, "head_dim": 64, "seq": 512},
+)
+
+
+@register_kernel_space
+def _paged_space() -> KernelSpace:
+    return KernelSpace(
+        name="paged_flash_decode",
+        baseline=PAGED_BASELINE,
+        default=PAGED_OPTIMIZED,
+        run=_paged_run,
+        oracle=_oracle,       # paging + gather must reproduce contiguous
+        cost=paged_cost,
+        knobs=(
+            Knob("page_size", "pow2", 8, 256,
+                 attacks=("overhead", "memory"),
+                 note="KV pool granule = rows per grid step; small pages "
+                      "cut allocator fragmentation, large pages cut "
+                      "grid/DMA overhead"),
+            Knob("mask_oob", "bool", attacks=("memory", "compute"),
+                 target=True,
+                 note="predicate logical pages past kv_len"),
+            Knob("use_reciprocal", "bool", attacks=("compute",), target=True),
+        ),
+        suite_shapes=PAGED_SUITE_SHAPES,
         make_inputs=make_inputs,
     )

@@ -109,3 +109,20 @@ def flash_decode_attention(q, k, v, *, kv_len=None, sm_scale=None,
         return out
     lse = ref.flash_decode_lse(q, k, kv_len=kv_len, sm_scale=sm_scale)
     return out, lse
+
+
+def paged_flash_decode_attention(q, k_pages, v_pages, page_table, *,
+                                 kv_len=None, sm_scale=None,
+                                 impl: Impl = "auto"):
+    """Single-token GQA decode attention over a paged KV pool: K/V blocks
+    are gathered through ``page_table`` (``[batch, pages_per_seq]`` physical
+    page indices into the ``[num_pages, page_size, kv_heads, head_dim]``
+    pool). The paged serving engine's decode hot path lands here."""
+    use, interp = _use_pallas(impl)
+    if use:
+        return _fd.paged_flash_decode_attention(
+            q, k_pages, v_pages, page_table, kv_len=kv_len,
+            sm_scale=sm_scale, variant=get_variant("paged_flash_decode"),
+            interpret=interp)
+    return ref.paged_flash_decode_attention(q, k_pages, v_pages, page_table,
+                                            kv_len=kv_len, sm_scale=sm_scale)

@@ -134,6 +134,39 @@ def flash_decode_attention(
     return out.reshape(b, hq, dh).astype(q.dtype)
 
 
+def paged_flash_decode_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    *,
+    kv_len: jax.Array | None = None,
+    sm_scale: float | None = None,
+):
+    """Oracle for paged decode attention: gather the logical cache through
+    the page table, then contiguous decode attention.
+
+    Args:
+      q: ``[batch, q_heads, head_dim]``.
+      k_pages, v_pages: ``[num_pages, page_size, kv_heads, head_dim]``
+        global page pool.
+      page_table: ``[batch, pages_per_seq]`` int32 physical page indices.
+      kv_len: optional ``[batch]`` valid lengths; rows at or past ``kv_len``
+        (including whatever trap/garbage pages the tail of the table points
+        at) are masked out exactly.
+
+    The gathered array ``k_pages[page_table]`` reshapes to the contiguous
+    ``[batch, pages_per_seq * page_size, kv_heads, head_dim]`` cache, so the
+    paged path is bit-identical to contiguous attention over the same rows.
+    """
+    b = q.shape[0]
+    _, page, hkv, dh = k_pages.shape
+    n_pt = page_table.shape[1]
+    k = k_pages[page_table].reshape(b, n_pt * page, hkv, dh)
+    v = v_pages[page_table].reshape(b, n_pt * page, hkv, dh)
+    return flash_decode_attention(q, k, v, kv_len=kv_len, sm_scale=sm_scale)
+
+
 def flash_decode_lse(
     q: jax.Array,
     k: jax.Array,

@@ -1,9 +1,13 @@
 """Serving driver: device-resident continuous-batching engine over the
-fused decode step (on-device sampling + stop conditions, bucketed prefill).
+fused decode step (on-device sampling + stop conditions, bucketed prefill,
+paged KV pool with preemption for PAGED_OK families).
 
 CPU-runnable:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --requests 6 --slots 3 --max-new 8
+    # oversubscribed paged pool (forces preemption + swap-in):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+        --requests 8 --prompt-len 48 --max-new 24 --num-pages 12
 """
 
 from __future__ import annotations
@@ -21,10 +25,12 @@ from repro.serving.engine import Engine, Request
 
 def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
         slots: int = 3, max_new: int = 8, max_seq: int = 128,
-        prompt_len: int = 16, seed: int = 0, verbose: bool = True):
+        prompt_len: int = 16, seed: int = 0, verbose: bool = True,
+        page_size: int = 16, num_pages: int | None = None):
     cfg = configs.smoke(arch) if smoke else configs.get(arch)
     params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
-    engine = Engine(params, cfg, slots=slots, max_seq=max_seq)
+    engine = Engine(params, cfg, slots=slots, max_seq=max_seq,
+                    page_size=page_size, num_pages=num_pages)
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
     for rid in range(requests):
@@ -48,6 +54,13 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
               f"({total_tokens/dt:.1f} tok/s, continuous batching x{slots}, "
               f"ttft {np.mean(ttfts)*1e3:.0f}ms, {s['steps']} steps, "
               f"{s['prefill_compiles']} prefill compiles)")
+        if s["paged"]:
+            print(f"paged pool: {s['num_pages']} pages x {s['page_size']} "
+                  f"rows ({s['preempt_mode']} preemption) — "
+                  f"{s['preemptions']} preemptions, "
+                  f"peak {s['peak_pages_in_use']}/{s['num_pages']} pages, "
+                  f"mean util {s['page_util_mean']:.0%}, "
+                  f"frag {s['page_frag_mean']:.0%}")
     return done
 
 
@@ -59,9 +72,16 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged-pool size; below slots*max_seq/page_size "
+                         "oversubscribes (admission queues + preemption)")
     args = ap.parse_args()
     run(arch=args.arch, requests=args.requests, slots=args.slots,
-        max_new=args.max_new, max_seq=args.max_seq)
+        max_new=args.max_new, max_seq=args.max_seq,
+        prompt_len=args.prompt_len, page_size=args.page_size,
+        num_pages=args.num_pages)
 
 
 if __name__ == "__main__":

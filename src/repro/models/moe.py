@@ -33,6 +33,13 @@ GROUP = 256  # tokens per dispatch group
 # engine therefore prefills MoE prompts at exact length.
 PAD_PREFILL = False
 
+# Paged-KV serving is NOT exact here even though the cache itself is
+# positional K/V: capacity routing couples decode across pool slots, so a
+# preemption (which changes which requests occupy the other slots) would
+# change the surviving requests' tokens. The serving engine keeps the
+# contiguous per-slot pool for this family.
+PAGED_OK = False
+
 
 def capacity(cfg: ModelConfig, group: int) -> int:
     c = int(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)

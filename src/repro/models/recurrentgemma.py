@@ -35,6 +35,11 @@ C_RGLRU = 8.0
 # engine prefills Griffin prompts at exact length.
 PAD_PREFILL = False
 
+# The cache mixes rolling-window K/V with fixed-size recurrent + conv
+# state leaves: the recurrent leaves do not page, and the windowed K/V is
+# already bounded. Contiguous per-slot pool only.
+PAGED_OK = False
+
 
 # --------------------------------------------------------------------------
 # init

@@ -66,6 +66,30 @@ def pad_prefill_ok(cfg: ModelConfig) -> bool:
     return bool(getattr(module_for(cfg), "PAD_PREFILL", False))
 
 
+def paged_ok(cfg: ModelConfig) -> bool:
+    """True when this arch can serve from a paged KV pool: the family
+    declares ``PAGED_OK`` (positional K/V, slot-independent decode, exact
+    recompute preemption) AND the arch has no rolling window (a windowed
+    cache is already bounded and its pos%window layout does not page)."""
+    return (bool(getattr(module_for(cfg), "PAGED_OK", False))
+            and not cfg.window)
+
+
+def paged_cache_spec(cfg: ModelConfig, num_pages: int, page_size: int):
+    return module_for(cfg).paged_cache_spec(cfg, num_pages, page_size)
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    return module_for(cfg).init_paged_cache(cfg, num_pages, page_size)
+
+
+def decode_step_paged(params, cfg: ModelConfig, pool, page_table, token,
+                      pos, *, seq_shard_axis=None):
+    return module_for(cfg).decode_step_paged(
+        params, cfg, pool, page_table, token, pos,
+        seq_shard_axis=seq_shard_axis)
+
+
 def write_slot(cfg: ModelConfig, pool, new, slot, max_seq: int):
     """Scatter one request's prefill cache (batch=1) into pool slot ``slot``.
 
@@ -94,6 +118,71 @@ def write_slot(cfg: ModelConfig, pool, new, slot, max_seq: int):
         starts[ba] = jnp.asarray(slot, jnp.int32)
         out.append(jax.lax.dynamic_update_slice(
             p, n.astype(p.dtype), tuple(starts)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def read_pages(cfg: ModelConfig, pool, pages, page_size: int):
+    """Gather whole pages out of the paged pool back into prefill layout
+    (``[..., batch=1, n*page_size, ...]`` per leaf) — the exact inverse of
+    ``write_pages``. The serving engine's swap-preemption path reads a
+    victim's pages to host with this and later writes the same bytes back
+    through ``write_pages``, so a preempted request's logical cache is
+    restored bit-for-bit."""
+    _, axes = cache_spec(cfg, 1, page_size)
+    is_ax = lambda x: isinstance(x, tuple)
+    pool_leaves, treedef = jax.tree.flatten(pool)
+    ax_leaves = jax.tree.leaves(axes, is_leaf=is_ax)
+    out = []
+    for p, ax in zip(pool_leaves, ax_leaves):
+        ba, sa = ax.index("batch"), ax.index("kv_seq")
+        if sa != ba + 1:
+            raise ValueError(f"paged layout needs adjacent (batch, kv_seq) "
+                             f"axes, got {ax}")
+        g = jnp.moveaxis(jnp.moveaxis(p, ba, 0)[pages], 0, ba)
+        g = g.reshape(g.shape[:ba] + (-1,) + g.shape[ba + 2:])
+        out.append(jnp.expand_dims(g, ba))
+    return jax.tree.unflatten(treedef, out)
+
+
+def write_pages(cfg: ModelConfig, pool, new, pages, page_size: int):
+    """Scatter one request's prefill cache (batch=1) into whole pool pages.
+
+    ``pool`` is the paged block pool from ``init_paged_cache`` (the
+    contiguous cache's adjacent (batch, kv_seq) axes become the global
+    (pages, page) axes); ``pages`` is a ``[n]`` int32 vector of physical
+    page destinations for the prompt's logical pages 0..n-1.  Like
+    ``write_slot``, the scatter is axes-driven off ``cache_spec``'s logical
+    axes, so it holds for any paged family layout.  ``pages`` may be a
+    traced vector: one jitted admission function serves every allocation
+    pattern of a given prompt bucket.  Entries in ``pages`` may repeat the
+    engine's trap page (bucket tail past the allocated prefix); duplicate
+    destinations only ever carry masked pad garbage."""
+    _, axes = cache_spec(cfg, 1, page_size)
+    is_ax = lambda x: isinstance(x, tuple)
+    pool_leaves, treedef = jax.tree.flatten(pool)
+    new_leaves = jax.tree.leaves(new)
+    ax_leaves = jax.tree.leaves(axes, is_leaf=is_ax)
+    n_pages = pages.shape[0]
+    target = n_pages * page_size
+    out = []
+    for p, n, ax in zip(pool_leaves, new_leaves, ax_leaves):
+        ba, sa = ax.index("batch"), ax.index("kv_seq")
+        if sa != ba + 1:
+            raise ValueError(f"paged layout needs adjacent (batch, kv_seq) "
+                             f"axes, got {ax}")
+        n = jnp.squeeze(n, axis=ba)              # batch=1 -> seq at axis ba
+        s = n.shape[ba]
+        if s < target:
+            pad = [(0, 0)] * n.ndim
+            pad[ba] = (0, target - s)
+            n = jnp.pad(n, pad)
+        elif s > target:
+            n = jax.lax.slice_in_dim(n, 0, target, axis=ba)
+        n = n.reshape(n.shape[:ba] + (n_pages, page_size) + n.shape[ba + 1:])
+        pm = jnp.moveaxis(p, ba, 0)              # pages axis leading
+        nm = jnp.moveaxis(n, ba, 0)
+        pm = pm.at[pages].set(nm.astype(p.dtype))
+        out.append(jnp.moveaxis(pm, 0, ba))
     return jax.tree.unflatten(treedef, out)
 
 

@@ -30,6 +30,11 @@ from repro.models import layers as L
 # position's encoding, so source frames are always encoded at exact length.
 PAD_PREFILL = False
 
+# Dual self+cross KV caches: the cross-attention cache is encoder-length
+# (not decode-position) indexed, so the uniform (pages, page) pool layout
+# does not describe it. Contiguous per-slot pool only.
+PAGED_OK = False
+
 
 def _cross_attn_params(key, cfg, dtype):
     return L.attn_params(key, cfg, dtype)

@@ -28,6 +28,16 @@ from repro.models import layers as L
 # admission on this flag.
 PAD_PREFILL = True
 
+# Paged-KV serving is exact here: the cache is positional K/V, decode is
+# per-slot independent (no cross-request coupling in any op), and recompute
+# preemption — re-prefilling prompt + generated prefix — reproduces the
+# straight-through stream under greedy sampling. Families with recurrent
+# state (xlstm/hybrid), cross-attention caches (encdec), or slot-coupled
+# routing (moe capacity) keep the contiguous pool. Rolling-window archs
+# (cfg.window) are excluded by ``registry.paged_ok``: their cache is already
+# bounded and its pos%window layout does not page.
+PAGED_OK = True
+
 
 # --------------------------------------------------------------------------
 # init
@@ -125,6 +135,24 @@ def cache_spec(cfg: ModelConfig, batch: int, seq: int):
 
 def init_cache(cfg: ModelConfig, batch: int, seq: int):
     spec, axes = cache_spec(cfg, batch, seq)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec), axes
+
+
+def paged_cache_spec(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Paged pool layout: the contiguous cache's (batch, kv_seq) axes become
+    one global (pages, page) block pool shared by every request."""
+    if cfg.window:
+        raise ValueError("rolling-window caches do not page "
+                         "(registry.paged_ok gates on cfg.window)")
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("layers", "pages", "page", "kv_heads", "head_dim")
+    return ({"k": jax.ShapeDtypeStruct(shape, cfg.jnp_dtype),
+             "v": jax.ShapeDtypeStruct(shape, cfg.jnp_dtype)},
+            {"k": axes, "v": axes})
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    spec, axes = paged_cache_spec(cfg, num_pages, page_size)
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec), axes
 
 
@@ -233,6 +261,67 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
 
     (hidden, residual, ks, vs), _ = lax.scan(
         body, (hidden, residual, cache["k"], cache["v"]),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    normed, _ = L.add_rms_norm(hidden, residual, params["final_norm"],
+                               cfg.norm_eps)
+    logits = L.unembed(normed[:, 0], params["lm_head"])
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step_paged(params, cfg: ModelConfig, pool, page_table, token,
+                      pos, *, seq_shard_axis=None):
+    """One decode step over the paged KV pool.
+
+    pool: ``{"k","v": [L, num_pages, page, Hkv, dh]}`` global block pool;
+    page_table: ``[B, pages_per_slot]`` int32 (physical page of logical page
+    ``j`` for slot ``b``; unallocated tail entries point at the engine's
+    trap page). token/pos as in ``decode_step``.
+
+    The new token's K/V scatter goes through the table —
+    ``(page_table[b, pos//page], pos % page)`` — and attention gathers
+    blocks through the same table (``ops.paged_flash_decode_attention``),
+    so the math is bit-identical to ``decode_step`` over the contiguous
+    cache the table describes. The pool rides in the scan carry exactly
+    like the contiguous cache (in-place aliased carry updates)."""
+    from repro.kernels import ops
+    if seq_shard_axis is not None:
+        raise NotImplementedError(
+            "sequence-sharded decode uses the contiguous split-KV path")
+    hidden = L.embed_tokens(params["embed"], token[:, None]) \
+        .astype(cfg.jnp_dtype)                                  # [B,1,D]
+    residual = jnp.zeros_like(hidden)
+    page = pool["k"].shape[2]
+    n_pt = page_table.shape[1]
+    b_idx = jnp.arange(token.shape[0])
+    pidx = jnp.clip(pos // page, 0, n_pt - 1)
+    phys = page_table[b_idx, pidx]          # [B] physical page being written
+    off = pos % page
+    kv_len = pos + 1
+
+    def body(carry, layer_in):
+        p_layer, li = layer_in
+        hidden, residual, ks, vs = carry
+        k_l = lax.dynamic_index_in_dim(ks, li, 0, keepdims=False)
+        v_l = lax.dynamic_index_in_dim(vs, li, 0, keepdims=False)
+        normed, residual = L.add_rms_norm(hidden, residual,
+                                          p_layer["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = L.qkv_proj(p_layer["attn"], normed, cfg)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k_new = L.rope(k_new, pos[:, None], cfg.rope_theta)
+        k_l = k_l.at[phys, off].set(k_new[:, 0].astype(k_l.dtype))
+        v_l = v_l.at[phys, off].set(v_new[:, 0].astype(v_l.dtype))
+        ks = lax.dynamic_update_index_in_dim(ks, k_l, li, 0)
+        vs = lax.dynamic_update_index_in_dim(vs, v_l, li, 0)
+        o = ops.paged_flash_decode_attention(q[:, 0], k_l, v_l, page_table,
+                                             kv_len=kv_len)
+        attn_out = L.out_proj(p_layer["attn"], o[:, None], o.dtype)
+        normed, residual = L.add_rms_norm(attn_out, residual,
+                                          p_layer["mlp_norm"], cfg.norm_eps)
+        hidden = L.mlp_block(p_layer["mlp"], normed)
+        return (hidden, residual, ks, vs), None
+
+    (hidden, residual, ks, vs), _ = lax.scan(
+        body, (hidden, residual, pool["k"], pool["v"]),
         (params["layers"], jnp.arange(cfg.n_layers)))
     normed, _ = L.add_rms_norm(hidden, residual, params["final_norm"],
                                cfg.norm_eps)

@@ -36,6 +36,10 @@ CHUNK = 64  # remat chunk for the recurrent scans
 # engine prefills xLSTM prompts at exact length.
 PAD_PREFILL = False
 
+# The "cache" is fixed-size recurrent state, not a growing positional K/V
+# sequence — there is nothing to page. Contiguous per-slot pool only.
+PAGED_OK = False
+
 
 def _dims(cfg: ModelConfig):
     d_inner = 2 * cfg.d_model

@@ -22,12 +22,28 @@ batching à la SGLang/vLLM). The decode hot path never leaves the device:
   most ``log2(max_seq)+1`` prefill compiles. Stateful families (MoE
   capacity routing, recurrences, bidirectional encoders) prefill at exact
   length — identical to the historical engine's compile behavior.
+* **Paged KV pool with oversubscription** — for families that declare
+  ``PAGED_OK`` (positional K/V, slot-independent decode: the dense
+  transformer), the per-slot ``slots x max_seq`` cache is replaced by a
+  global ``[num_pages, page_size, ...]`` block pool plus per-slot page
+  tables (SGLang/vLLM-style). Capacity is then bounded by *actual token
+  count*, not worst-case length: ``num_pages`` may be much smaller than
+  ``slots * max_seq / page_size``. Admission allocates whole pages and
+  writes the bucketed prefill through the axes-driven
+  ``registry.write_pages``; decode grows a slot's table one page at a time
+  and gathers K/V blocks through it (``paged_flash_decode`` kernel). When
+  the pool runs dry, the youngest occupant is **preempted**: its pages are
+  freed and the request re-queued (front) with its generated prefix folded
+  into the prompt — recompute preemption, which under greedy sampling
+  reproduces the straight-through stream exactly. Stateful families keep
+  the contiguous pool (see each family's ``PAGED_OK`` note).
 
 Token streams are bit-identical to the historical host-driven engine
-(``repro.serving.reference.ReferenceEngine``); asserted end-to-end in
-``tests/test_serving.py``. This is the end-to-end consumer of all three
-paper kernels on TPU: flash-decode (with the Kernel-1 merge), fused
-add-RMSNorm, silu-and-mul.
+(``repro.serving.reference.ReferenceEngine``) — paged or not, preempted or
+not; asserted end-to-end in ``tests/test_serving.py``. This is the
+end-to-end consumer of all three paper kernels on TPU: flash-decode
+(with the Kernel-1 merge, paged form included), fused add-RMSNorm,
+silu-and-mul.
 """
 
 from __future__ import annotations
@@ -45,6 +61,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
+from repro.serving.paging import PagePool
 
 
 @contextlib.contextmanager
@@ -67,25 +84,88 @@ class Request:
     done: bool = False
     t_submit: float = 0.0               # set by Engine.submit
     t_first: float = 0.0                # wall time of the first token (TTFT)
+    preemptions: int = 0                # paged engine: times evicted+requeued
+    arrival: int = -1                   # FCFS rank, stamped by Engine.submit
+    # swap-preemption payload: (host KV pages, token, pos, emitted) — the
+    # victim's exact device state, restored verbatim on re-admission
+    swap_state: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Optional[Request] = None
-    start: int = 0                      # decode start position (host copy)
+    # exact host mirror of the device's per-slot decode state — the device
+    # stop conditions are deterministic, so the host can track position,
+    # emit count, and active-ness without waiting for the (overlapped)
+    # readback. The paged allocator predicts each step's write page from
+    # ``dpos``; the drain heuristic reads ``dactive``.
+    dpos: int = 0                       # device pos (next write position)
+    demitted: int = 0                   # device emitted count
+    dactive: bool = False               # device active flag
 
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 max_seq: int = 512, greedy: bool = True):
+                 max_seq: int = 512, greedy: bool = True,
+                 paged: Optional[bool] = None, page_size: int = 16,
+                 num_pages: Optional[int] = None, preempt: str = "swap"):
+        """``paged=None`` auto-selects: paged pool when the family supports
+        it (``registry.paged_ok``), contiguous otherwise. ``num_pages``
+        defaults to full subscription (``slots * max_seq / page_size``);
+        pass fewer to oversubscribe — admission then waits for pages and
+        decode growth preempts the youngest occupant when the pool runs
+        dry.
+
+        ``preempt`` picks what eviction does with the victim's KV:
+
+        * ``"swap"`` (default) — copy its pages to host, restore the same
+          bytes on re-admission. Bit-exact: the stream provably equals the
+          never-preempted stream, so the ReferenceEngine equivalence and
+          the CI goldens hold under arbitrary preemption.
+        * ``"recompute"`` — drop the pages; re-admission folds the
+          generated prefix into the prompt and re-prefills (vLLM's
+          recompute mode). Cheaper in host memory but only *greedy-stable*:
+          prefill and decode accumulate in different orders, so a
+          near-tied argmax many steps later can flip (observed at one
+          token in ~10^3 under heavy eviction) — fine for serving, not for
+          bit-exact replay."""
         if not greedy:
             raise NotImplementedError("only greedy (argmax) sampling")
+        if preempt not in ("swap", "recompute"):
+            raise ValueError(f"preempt={preempt!r}: want 'swap'|'recompute'")
+        self.preempt_mode = preempt
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_seq = slots, max_seq
         self.slots = [_Slot() for _ in range(slots)]
-        self.cache, _ = registry.init_cache(cfg, slots, max_seq)
+        if paged and not registry.paged_ok(cfg):
+            raise ValueError(f"family {cfg.family!r} (window={cfg.window}) "
+                             "cannot serve from a paged pool")
+        self.paged = registry.paged_ok(cfg) if paged is None else bool(paged)
+        if self.paged:
+            if max_seq % page_size:
+                raise ValueError(f"page_size={page_size} must divide "
+                                 f"max_seq={max_seq} (the gathered logical "
+                                 "cache must tile exactly)")
+            self.page_size = page_size
+            self._n_pt = max_seq // page_size
+            if num_pages is None:
+                num_pages = slots * self._n_pt      # full subscription
+            self.num_pages = num_pages
+            self._pool = PagePool(num_pages, page_size, slots, self._n_pt)
+            # +1: physical page 0 is the trap page (see repro.serving.paging)
+            self.cache, _ = registry.init_paged_cache(cfg, num_pages + 1,
+                                                      page_size)
+        else:
+            self.page_size = self.num_pages = None
+            self._pool = None
+            self.cache, _ = registry.init_cache(cfg, slots, max_seq)
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
+        self.preemptions = 0
+        self._arrivals = 0
+        self._peak_pages = 0
+        self._util_sum = 0.0
+        self._frag_sum = 0.0
         self._pad_ok = registry.pad_prefill_ok(cfg)
         # device-resident per-slot decode state
         self._token = jnp.zeros((slots,), jnp.int32)
@@ -103,6 +183,10 @@ class Engine:
         # behavior, minus its eager scatter and host argmax.
         self._admit_fn = jax.jit(self._make_admit(),
                                  donate_argnums=(1, 2, 3, 4, 5, 6))
+        if self.paged:
+            # swap-in restore; compile key = saved page count (<= n_pt)
+            self._restore_fn = jax.jit(self._make_restore(),
+                                       donate_argnums=(0, 1, 2, 3, 4, 5))
         # (emit arrays, request snapshot) of the last dispatched step, not
         # yet read back — drained after the NEXT dispatch (overlap)
         self._pending = None
@@ -113,10 +197,16 @@ class Engine:
 
     def _make_step(self):
         cfg, vocab, max_seq = self.cfg, self.cfg.vocab, self.max_seq
+        paged = self.paged
 
-        def fused(params, cache, token, pos, active, emitted, max_new):
-            logits, cache = registry.decode_step(params, cfg, cache,
-                                                 token, pos)
+        def body(params, cache, token, pos, active, emitted, max_new,
+                 page_table=None):
+            if paged:
+                logits, cache = registry.decode_step_paged(
+                    params, cfg, cache, page_table, token, pos)
+            else:
+                logits, cache = registry.decode_step(params, cfg, cache,
+                                                     token, pos)
             # greedy sampling over the whole pool (masked slots produce a
             # token too — exactly like the host engine — so families whose
             # decode couples slots, e.g. MoE capacity routing, see an
@@ -134,12 +224,24 @@ class Engine:
             return (cache, nxt, new_pos, new_active, new_emitted,
                     (emit_tok, done))
 
+        if paged:
+            # the page table is a host-owned np array re-sent each dispatch
+            # (tiny: slots * pages_per_slot i32) — NOT donated
+            def fused(params, cache, token, pos, active, emitted, max_new,
+                      page_table):
+                return body(params, cache, token, pos, active, emitted,
+                            max_new, page_table)
+        else:
+            def fused(params, cache, token, pos, active, emitted, max_new):
+                return body(params, cache, token, pos, active, emitted,
+                            max_new)
         return fused
 
     def _make_admit(self):
         cfg, vocab, max_seq = self.cfg, self.cfg.vocab, self.max_seq
         encdec = cfg.family == "encdec"
         pad_ok = self._pad_ok
+        page = self.page_size
 
         def admit(params, cache, token, pos, active, emitted, max_new,
                   prompt, length, slot, req_max_new):
@@ -156,12 +258,51 @@ class Engine:
             max_new = max_new.at[slot].set(req_max_new)
             return cache, token, pos, active, emitted, max_new, tok0
 
-        return admit
+        def admit_paged(params, cache, token, pos, active, emitted, max_new,
+                        prompt, length, slot, req_max_new, req_emitted,
+                        pages):
+            # req_emitted carries the cumulative emit count across requeues
+            # (recompute preemption: the generated prefix is already in the
+            # prompt and in out_tokens); pages is the physical destination
+            # of each logical prompt page, trap-padded to the bucket, so
+            # the compile key stays (bucket shape) — identical retrace
+            # behavior to the contiguous engine.
+            logits, kv = registry.prefill(params, cfg, prompt[None],
+                                          length=length)
+            cache = registry.write_pages(cfg, cache, kv, pages, page)
+            tok0 = jnp.argmax(logits[0, :vocab]).astype(jnp.int32)
+            token = token.at[slot].set(tok0)
+            pos = pos.at[slot].set(length)
+            active = active.at[slot].set(True)
+            emitted = emitted.at[slot].set(req_emitted)
+            max_new = max_new.at[slot].set(req_max_new)
+            return cache, token, pos, active, emitted, max_new, tok0
+
+        return admit_paged if self.paged else admit
+
+    def _make_restore(self):
+        """Jitted swap-in: write a victim's saved pages back into (new)
+        physical pages and restore its device slot state verbatim."""
+        cfg, page = self.cfg, self.page_size
+
+        def restore(cache, token, pos, active, emitted, max_new,
+                    saved, tok, dpos, demitted, req_max_new, slot, pages):
+            cache = registry.write_pages(cfg, cache, saved, pages, page)
+            token = token.at[slot].set(tok)
+            pos = pos.at[slot].set(dpos)
+            active = active.at[slot].set(True)
+            emitted = emitted.at[slot].set(demitted)
+            max_new = max_new.at[slot].set(req_max_new)
+            return cache, token, pos, active, emitted, max_new
+
+        return restore
 
     # -- request lifecycle ---------------------------------------------------
 
     def submit(self, req: Request):
         req.t_submit = time.perf_counter()
+        req.arrival = self._arrivals
+        self._arrivals += 1
         self.queue.append(req)
 
     def _bucket_len(self, n: int) -> Optional[int]:
@@ -176,45 +317,157 @@ class Engine:
             b *= 2
         return min(b, cap)
 
+    def _readmit_swapped(self, i: int, slot: _Slot, req: Request) -> bool:
+        """Swap-in re-admission: restore the victim's saved pages + device
+        state byte-for-byte (no prefill, no token emitted). False when the
+        pool cannot hold the pages yet (head-of-line waits)."""
+        saved, tok, dpos, demitted, n_real = req.swap_state
+        if not self._pool.alloc_n(i, n_real):
+            return False
+        self.queue.popleft()
+        pages = jnp.asarray(np.asarray(self._pool.owned[i], np.int32))
+        with _quiet_donation():
+            out = self._restore_fn(
+                self.cache, self._token, self._pos, self._active,
+                self._emitted, self._max_new,
+                jax.tree.map(jnp.asarray, saved), jnp.int32(tok),
+                jnp.int32(dpos), jnp.int32(demitted),
+                jnp.int32(req.max_new_tokens), jnp.int32(i), pages)
+        (self.cache, self._token, self._pos, self._active,
+         self._emitted, self._max_new) = out
+        req.swap_state = None
+        slot.req = req
+        slot.dpos = dpos
+        slot.demitted = demitted
+        slot.dactive = True
+        return True
+
     def _admit(self):
         for i, slot in enumerate(self.slots):
             if slot.req is None and self.queue:
-                req = self.queue.popleft()
+                req = self.queue[0]
+                if self.paged and req.swap_state is not None:
+                    if not self._readmit_swapped(i, slot, req):
+                        return         # head-of-line: FIFO waits for pages
+                    continue
                 prompt = np.asarray(req.prompt)
+                if req.out_tokens:
+                    # recompute re-admission after preemption: the generated
+                    # prefix joins the prompt, so prefill rebuilds the exact
+                    # logical cache the victim lost
+                    prompt = np.concatenate(
+                        [prompt, np.asarray(req.out_tokens, prompt.dtype)])
                 n = len(prompt)
                 b = self._bucket_len(n)
+                pages_arg = None
+                if self.paged:
+                    n_real = -(-n // self.page_size)
+                    if not self._pool.alloc_n(i, n_real):
+                        return     # head-of-line: FIFO waits for pages
+                    plen = b if b is not None else n
+                    b_pages = max(1, -(-plen // self.page_size))
+                    pages = np.zeros((b_pages,), np.int32)   # tail -> trap
+                    pages[:n_real] = self._pool.owned[i]
+                    pages_arg = jnp.asarray(pages)
+                self.queue.popleft()
                 if b is not None and b > n:
                     pad = np.zeros((b - n,) + prompt.shape[1:], prompt.dtype)
                     prompt = np.concatenate([prompt, pad])
                 self._prefill_shapes.add(prompt.shape)
-                with _quiet_donation():
-                    out = self._admit_fn(
-                        self.params, self.cache, self._token, self._pos,
+                args = (self.params, self.cache, self._token, self._pos,
                         self._active, self._emitted, self._max_new,
                         jnp.asarray(prompt), jnp.int32(n), jnp.int32(i),
                         jnp.int32(req.max_new_tokens))
+                if self.paged:
+                    args += (jnp.int32(len(req.out_tokens) + 1), pages_arg)
+                with _quiet_donation():
+                    out = self._admit_fn(*args)
                 (self.cache, self._token, self._pos, self._active,
                  self._emitted, self._max_new, tok0) = out
+                was_requeued = bool(req.out_tokens)
                 req.out_tokens.append(int(tok0))
-                req.t_first = time.perf_counter()
+                if not req.t_first:
+                    req.t_first = time.perf_counter()
+                if self.paged and was_requeued \
+                        and (len(req.out_tokens) >= req.max_new_tokens
+                             or n >= self.max_seq - 1):
+                    # Recompute re-admission delivered the request's FINAL
+                    # token: in the straight-through run this token came
+                    # from the decode step that fired the stop condition,
+                    # so it must not decode again. (A fresh admission never
+                    # checks — the reference engine always decodes at least
+                    # one step after prefill.)
+                    req.done = True
+                    self.finished.append(req)
+                    self._active = self._active.at[i].set(False)
+                    self._pool.release(i)
+                    continue
                 slot.req = req
-                slot.start = 1 if self.cfg.family == "encdec" else n
+                slot.dpos = 1 if self.cfg.family == "encdec" else n
+                slot.demitted = len(req.out_tokens)
+                slot.dactive = True
+
+    # -- paged pool growth / preemption --------------------------------------
+
+    def _preempt(self, victim: int) -> None:
+        """Evict the occupant of ``victim``: free its pages, deactivate the
+        device slot, and re-queue the request at the FRONT (it keeps its
+        FIFO rank). ``preempt="swap"`` first copies the victim's pages and
+        device state to host for a byte-exact swap-in later;
+        ``"recompute"`` drops them — re-admission folds the generated
+        prefix into the prompt and re-prefills. Caller must have drained
+        the pending emit (the victim's stream must be settled before its
+        pages are reused)."""
+        assert self._pending is None
+        slot = self.slots[victim]
+        req = slot.req
+        if self.preempt_mode == "swap":
+            owned = np.asarray(self._pool.owned[victim], np.int32)
+            saved = registry.read_pages(self.cfg, self.cache,
+                                        jnp.asarray(owned), self.page_size)
+            req.swap_state = (
+                jax.tree.map(np.asarray, saved),      # host copy (swap out)
+                int(np.asarray(self._token)[victim]),
+                slot.dpos, slot.demitted, len(owned))
+        self._pool.release(victim)
+        slot.req = None
+        slot.dactive = False
+        self._active = self._active.at[victim].set(False)
+        req.preemptions += 1
+        self.preemptions += 1
+        self.queue.appendleft(req)
+
+    def _ensure_pages(self) -> None:
+        """Before a dispatch, make every device-active slot's next write
+        position page-backed. On pool exhaustion: settle the in-flight
+        step (finished slots free pages), then preempt the youngest
+        occupant (FCFS — latest admission loses) until the write fits."""
+        for i in range(self.n_slots):
+            slot = self.slots[i]
+            if slot.req is None or not slot.dactive:
+                continue
+            need = slot.dpos // self.page_size     # page written this step
+            while need >= len(self._pool.owned[i]):
+                if self._pool.alloc(i):
+                    continue
+                self._drain()
+                if self.slots[i].req is None or not self.slots[i].dactive:
+                    break              # the drain settled this very slot
+                if self._pool.num_free:
+                    continue           # the drain freed finished slots
+                occ = [j for j in range(self.n_slots)
+                       if self.slots[j].req is not None]
+                victim = max(occ, key=lambda j: self.slots[j].req.arrival)
+                self._preempt(victim)
+                if victim == i:
+                    break              # preempted ourselves; requeued
 
     # -- one engine step -----------------------------------------------------
-
-    def _done_in_pending(self, slot: _Slot) -> bool:
-        """True when the slot's request finishes within the not-yet-applied
-        pending emit (the host can predict the device stop conditions from
-        its applied token count and start position)."""
-        req = slot.req
-        n_out = len(req.out_tokens)
-        return (n_out + 1 >= req.max_new_tokens
-                or slot.start + n_out >= self.max_seq - 1)
 
     def step(self) -> bool:
         if self._pending is not None and \
                 (self.queue and all(s.req is not None for s in self.slots)
-                 or all(s.req is None or self._done_in_pending(s)
+                 or all(s.req is None or not s.dactive
                         for s in self.slots)):
             # Catch up on the pending emit when it can change what to do
             # next: either its done flags may free slots for the waiting
@@ -224,23 +477,50 @@ class Engine:
             # decode step at the tail of each run.
             self._drain()
         self._admit()
+        if self.paged:
+            self._ensure_pages()
         if not any(s.req is not None for s in self.slots):
             self._drain()
             self._admit()
+            if self.paged:
+                self._ensure_pages()
             if not any(s.req is not None for s in self.slots):
                 return False
+        args = (self.params, self.cache, self._token, self._pos,
+                self._active, self._emitted, self._max_new)
+        if self.paged:
+            args += (jnp.asarray(self._pool.table),)
         with _quiet_donation():
-            out = self._step_fn(self.params, self.cache, self._token,
-                                self._pos, self._active, self._emitted,
-                                self._max_new)
+            out = self._step_fn(*args)
         (self.cache, self._token, self._pos, self._active,
          self._emitted, emit) = out
         self._steps += 1
+        # mirror the device's deterministic stop conditions on the host
+        # shadows (the readback of this step is still in flight)
+        for s in self.slots:
+            if s.req is not None and s.dactive:
+                s.demitted += 1
+                s.dpos += 1
+                if (s.demitted >= s.req.max_new_tokens
+                        or s.dpos >= self.max_seq - 1):
+                    s.dactive = False
+        if self.paged:
+            self._sample_page_stats()
         prev, self._pending = self._pending, (emit,
                                               [s.req for s in self.slots])
         if prev is not None:
             self._apply(prev)           # readback of step k-1 overlaps k
         return True
+
+    def _sample_page_stats(self):
+        in_use = self._pool.pages_in_use
+        self._peak_pages = max(self._peak_pages, in_use)
+        self._util_sum += in_use / self._pool.num_pages
+        alloc_rows = in_use * self.page_size
+        used_rows = sum(min(s.dpos, self.max_seq) for s in self.slots
+                        if s.req is not None)
+        if alloc_rows:
+            self._frag_sum += 1.0 - min(used_rows, alloc_rows) / alloc_rows
 
     def _drain(self):
         if self._pending is not None:
@@ -260,6 +540,10 @@ class Engine:
                 self.finished.append(req)
                 if self.slots[i].req is req:
                     self.slots[i].req = None
+                    if self.paged:
+                        # later dispatches route this slot's masked writes
+                        # to the trap page; its pages are safe to reuse
+                        self._pool.release(i)
 
     def run(self, max_steps: int = 10_000):
         while max_steps > 0 and (self.queue or self._pending is not None
@@ -274,15 +558,31 @@ class Engine:
     # -- introspection -------------------------------------------------------
 
     def stats(self) -> dict:
-        """Decode steps, prefill retrace count, and bucket coverage."""
+        """Decode steps, prefill retrace count, bucket coverage, and (paged)
+        preemption + page-pool utilization/fragmentation."""
         try:
             prefill_compiles = self._admit_fn._cache_size()
         except Exception:
             prefill_compiles = len(self._prefill_shapes)
-        return {
+        out = {
             "steps": self._steps,
             "prefill_compiles": int(prefill_compiles),
             "prefill_shapes": sorted(s[0] for s in self._prefill_shapes),
             "pad_prefill": self._pad_ok,
             "slots": self.n_slots,
+            "paged": self.paged,
+            "preemptions": self.preemptions,
         }
+        if self.paged:
+            steps = max(self._steps, 1)
+            out.update({
+                "preempt_mode": self.preempt_mode,
+                "page_size": self.page_size,
+                "num_pages": self.num_pages,
+                "peak_pages_in_use": self._peak_pages,
+                # time-averaged pool occupancy and internal fragmentation
+                # (allocated-but-unwritten rows / allocated rows)
+                "page_util_mean": self._util_sum / steps,
+                "page_frag_mean": self._frag_sum / steps,
+            })
+        return out

@@ -1,0 +1,101 @@
+"""Host-side page allocator for the paged KV pool.
+
+The device holds one global ``[num_pages + 1, page_size, ...]`` block pool
+per cache leaf; this class owns the host bookkeeping: which physical pages
+are free, which slot owns which pages, and the per-slot page tables the
+jitted decode step reads each dispatch.
+
+Physical page 0 is a reserved **trap page**: it is never allocated, and
+every unassigned page-table entry points at it. The fused decode step
+writes the new token's K/V for *every* pool slot (masked slots included —
+exactly like the contiguous engine's unconditional scatter), so a slot
+whose request finished or was preempted keeps scribbling somewhere until
+it is re-admitted; routing those writes into the trap page is what makes
+freeing + reusing a victim's pages safe while the victim's slot is still
+being dispatched. Trap contents are garbage by design and are only ever
+reachable through masked (``>= kv_len``) positions.
+
+Allocation is a LIFO free stack (deterministic: benchmark streams and
+goldens must not depend on allocator ordering noise). ``check()`` asserts
+the structural invariants — no page owned twice, free/owned partition the
+pool, trap never owned — and is called from the allocator unit tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+TRAP_PAGE = 0
+
+
+class PagePool:
+    def __init__(self, num_pages: int, page_size: int, slots: int,
+                 pages_per_slot: int):
+        if num_pages < pages_per_slot:
+            raise ValueError(
+                f"num_pages={num_pages} cannot hold even one full-length "
+                f"request ({pages_per_slot} pages of {page_size}); the "
+                f"engine could deadlock on an empty pool")
+        self.num_pages = num_pages          # usable (excludes the trap page)
+        self.page_size = page_size
+        self.pages_per_slot = pages_per_slot
+        # physical ids are 1..num_pages; pop() hands out ascending ids first
+        self._free = list(range(num_pages, 0, -1))
+        self.owned: list[list[int]] = [[] for _ in range(slots)]
+        # device-facing tables; row = slot, entry = physical page (0 = trap)
+        self.table = np.full((slots, pages_per_slot), TRAP_PAGE, np.int32)
+
+    # -- allocation ---------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, slot: int) -> bool:
+        """Grow ``slot`` by one page; False when the pool is exhausted."""
+        if not self._free:
+            return False
+        i = len(self.owned[slot])
+        if i >= self.pages_per_slot:
+            raise RuntimeError(f"slot {slot} already holds its max "
+                               f"{self.pages_per_slot} pages")
+        page = self._free.pop()
+        self.owned[slot].append(page)
+        self.table[slot, i] = page
+        return True
+
+    def alloc_n(self, slot: int, n: int) -> bool:
+        """All-or-nothing: grow ``slot`` by ``n`` pages or change nothing."""
+        if n > len(self._free) or len(self.owned[slot]) + n \
+                > self.pages_per_slot:
+            return False
+        for _ in range(n):
+            self.alloc(slot)
+        return True
+
+    def release(self, slot: int) -> None:
+        """Free every page ``slot`` owns; its table row reverts to trap."""
+        while self.owned[slot]:
+            self._free.append(self.owned[slot].pop())
+        self.table[slot, :] = TRAP_PAGE
+
+    # -- invariants ---------------------------------------------------------
+
+    def check(self) -> None:
+        """Structural invariants; raises AssertionError on violation."""
+        all_owned = [p for pages in self.owned for p in pages]
+        assert TRAP_PAGE not in all_owned, "trap page allocated"
+        assert len(all_owned) == len(set(all_owned)), \
+            "page owned by two live slots"
+        assert not set(all_owned) & set(self._free), "owned page in free list"
+        assert len(all_owned) + len(self._free) == self.num_pages, \
+            "pages leaked or duplicated"
+        for slot, pages in enumerate(self.owned):
+            row = self.table[slot]
+            assert list(row[:len(pages)]) == pages, "table/owned mismatch"
+            assert (row[len(pages):] == TRAP_PAGE).all(), \
+                "stale table entry past owned prefix"

@@ -1,0 +1,67 @@
+"""Page-allocator unit tests: alloc/free invariants, no page aliased by two
+live slots, trap-page discipline, and all-or-nothing batch allocation."""
+
+import numpy as np
+import pytest
+
+from repro.serving.paging import TRAP_PAGE, PagePool
+
+
+def test_alloc_release_invariants():
+    pool = PagePool(num_pages=8, page_size=16, slots=3, pages_per_slot=4)
+    assert pool.num_free == 8 and pool.pages_in_use == 0
+    assert pool.alloc(0) and pool.alloc(0) and pool.alloc(1)
+    pool.check()
+    assert pool.pages_in_use == 3
+    assert len(pool.owned[0]) == 2 and len(pool.owned[1]) == 1
+    # table rows mirror the owned prefix; everything else traps
+    assert list(pool.table[0][:2]) == pool.owned[0]
+    assert (pool.table[0][2:] == TRAP_PAGE).all()
+    assert (pool.table[2] == TRAP_PAGE).all()
+    pool.release(0)
+    pool.check()
+    assert pool.num_free == 7 and pool.owned[0] == []
+    assert (pool.table[0] == TRAP_PAGE).all()
+
+
+def test_no_page_aliased_by_two_live_slots():
+    pool = PagePool(num_pages=6, page_size=8, slots=3, pages_per_slot=3)
+    rng = np.random.default_rng(0)
+    for _ in range(200):                      # random alloc/release churn
+        slot = int(rng.integers(3))
+        if rng.random() < 0.4:
+            pool.release(slot)
+        elif len(pool.owned[slot]) < pool.pages_per_slot:
+            pool.alloc(slot)
+        pool.check()                          # raises on any aliasing
+        live = [p for pages in pool.owned for p in pages]
+        assert len(live) == len(set(live))
+        assert TRAP_PAGE not in live
+
+
+def test_exhaustion_and_all_or_nothing():
+    pool = PagePool(num_pages=4, page_size=16, slots=2, pages_per_slot=4)
+    assert pool.alloc_n(0, 3)
+    assert not pool.alloc_n(1, 2), "only 1 page left: must change nothing"
+    assert pool.owned[1] == [] and pool.num_free == 1
+    assert pool.alloc_n(1, 1)
+    assert not pool.alloc(0), "pool exhausted"
+    pool.check()
+    pool.release(0)
+    assert pool.alloc_n(0, 3)                 # freed pages come back
+    pool.check()
+
+
+def test_per_slot_capacity_enforced():
+    pool = PagePool(num_pages=8, page_size=16, slots=2, pages_per_slot=2)
+    assert pool.alloc_n(0, 2)
+    with pytest.raises(RuntimeError):
+        pool.alloc(0)                         # table row is full
+    assert not pool.alloc_n(1, 3), "cannot exceed pages_per_slot"
+
+
+def test_pool_too_small_rejected():
+    # a pool that cannot hold one full-length request could deadlock the
+    # engine's head-of-line admission; the allocator refuses to exist
+    with pytest.raises(ValueError):
+        PagePool(num_pages=3, page_size=16, slots=2, pages_per_slot=4)

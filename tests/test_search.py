@@ -21,7 +21,7 @@ from repro.search import (BeamSearch, EvalCache, GreedyChain, Population,
                           SearchOrchestrator, genome_digest, resolve_strategy)
 
 ALL_KERNELS = ("silu_and_mul", "fused_add_rmsnorm", "merge_attn_states_lse",
-               "flash_decode")
+               "flash_decode", "paged_flash_decode")
 
 
 def fast_orchestrator(cache=None):

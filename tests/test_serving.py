@@ -1,7 +1,9 @@
 """Serving-engine tests: bit-identical token streams vs the host-driven
 (pre-refactor) reference engine, slot recycling under ragged admission,
-the pow2 prefill retrace bound, and an engine smoke across all five model
-families (whose cache layouts all differ — the scatter is axes-driven)."""
+the pow2 prefill retrace bound, paged-pool serving (full subscription,
+oversubscription with swap preemption + requeue, recompute mode, per-family
+gating), and an engine smoke across all five model families (whose cache
+layouts all differ — the scatter is axes-driven)."""
 
 import math
 
@@ -108,6 +110,91 @@ def test_prefill_retrace_bound():
     assert stats["prefill_compiles"] <= int(math.log2(max_seq)) + 1
     assert stats["prefill_compiles"] < len(set(lens))
     assert len(new) == len(lens)
+
+
+def test_paged_matches_contiguous_pool():
+    """The paged pool (full subscription, no preemption) is a pure layout
+    change: token streams equal the contiguous engine's bit-for-bit."""
+    cfg, params = _setup("qwen2-0.5b")
+    lens = [3, 9, 5, 12, 7]
+    paged, eng = _streams(Engine, cfg, params, lens, max_new=4)
+    contig, ceng = _streams(lambda p, c, **kw: Engine(p, c, paged=False, **kw),
+                            cfg, params, lens, max_new=4)
+    assert eng.stats()["paged"] and not ceng.stats()["paged"]
+    assert paged == contig
+    assert eng.stats()["preemptions"] == 0
+
+
+def test_oversubscribed_bit_identical_with_preemption():
+    """Oversubscribed pool (requests x lengths > capacity): the engine must
+    preempt at least once, swap the victims back in, and still produce
+    token streams bit-identical to the never-evicting reference engine."""
+    cfg, params = _setup("qwen2-0.5b")
+    lens = [30, 25, 28, 21, 26]          # ~130 prompt rows + generation
+    kw = dict(max_new=20, slots=3, max_seq=64)
+    new, eng = _streams(
+        lambda p, c, **k: Engine(p, c, page_size=16, num_pages=6, **k),
+        cfg, params, lens, **dict(kw))
+    ref, _ = _streams(ReferenceEngine, cfg, params, lens, **dict(kw))
+    st = eng.stats()
+    assert st["paged"] and st["preemptions"] >= 1
+    assert st["peak_pages_in_use"] <= 6
+    assert new == ref
+    eng._pool.check()
+
+
+def test_forced_preemption_requeue_roundtrip():
+    """Minimum-size pool (one full-length slot) under long generations:
+    every admission fights for pages, so requests are evicted and swapped
+    back repeatedly — streams must survive multiple preemptions of the
+    SAME request unchanged."""
+    cfg, params = _setup("qwen2-0.5b")
+    lens = [20, 17, 23]
+    kw = dict(max_new=30, slots=3, max_seq=64)
+    new, eng = _streams(
+        lambda p, c, **k: Engine(p, c, page_size=16, num_pages=4, **k),
+        cfg, params, lens, **dict(kw))
+    ref, _ = _streams(ReferenceEngine, cfg, params, lens, **dict(kw))
+    assert new == ref
+    assert eng.stats()["preemptions"] >= 2
+    assert max(r.preemptions for r in eng.finished) >= 1
+    assert all(r.done for r in eng.finished)
+    eng._pool.check()
+    assert eng._pool.pages_in_use == 0, "finished requests must free pages"
+
+
+def test_recompute_preemption_completes():
+    """vLLM-style recompute preemption (drop pages, re-prefill the prompt +
+    generated prefix): requests complete with exactly the reference token
+    counts and keep their pre-eviction prefix. (Token values are only
+    greedy-stable, not bit-guaranteed — that is what swap mode is for.)"""
+    cfg, params = _setup("qwen2-0.5b")
+    lens = [22, 19, 26]
+    kw = dict(max_new=25, slots=3, max_seq=64)
+    new, eng = _streams(
+        lambda p, c, **k: Engine(p, c, page_size=16, num_pages=4,
+                                 preempt="recompute", **k),
+        cfg, params, lens, **dict(kw))
+    ref, _ = _streams(ReferenceEngine, cfg, params, lens, **dict(kw))
+    assert eng.stats()["preemptions"] >= 1
+    assert sorted(new) == sorted(ref)
+    assert all(len(new[k]) == len(ref[k]) for k in ref)
+    eng._pool.check()
+
+
+def test_paged_gating_per_family():
+    """Only PAGED_OK families without a rolling window page; forcing
+    paged=True elsewhere is an error, and auto mode falls back."""
+    cfg_moe, params_moe = _setup("olmoe-1b-7b")
+    assert not registry.paged_ok(cfg_moe)
+    eng = Engine(params_moe, cfg_moe, slots=2, max_seq=64)
+    assert not eng.stats()["paged"]
+    with pytest.raises(ValueError):
+        Engine(params_moe, cfg_moe, slots=2, max_seq=64, paged=True)
+    cfg_q, params_q = _setup("qwen2-0.5b")
+    assert registry.paged_ok(cfg_q)
+    with pytest.raises(ValueError):   # page size must tile max_seq
+        Engine(params_q, cfg_q, slots=2, max_seq=64, page_size=24)
 
 
 @pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
