@@ -36,8 +36,11 @@ BENCH_JSON = os.path.join(HERE, "artifacts", "bench.json")
 BASELINE = os.path.join(HERE, "baseline.json")
 
 # serving counters that must match the baseline exactly (deterministic for
-# a fixed seed; a change means the engine's behavior changed, not the host)
-EXACT_SERVING = ("steps", "prefill_compiles", "preemptions")
+# a fixed seed; a change means the engine's behavior changed, not the
+# host). ``sched_reorders`` pins scheduler-policy behavior: 0 under FCFS
+# by construction, an exact reorder count for the priority_mix scenario.
+EXACT_SERVING = ("steps", "prefill_compiles", "preemptions",
+                 "sched_reorders")
 
 
 def _serving_key(row: dict) -> str:

@@ -17,9 +17,18 @@ at once), ``oversubscribed`` (long prompts x long generations whose total
 token demand exceeds a deliberately undersized page pool — the paged
 engine must admit by actual token count, grow slots page-by-page, and
 preempt/swap the youngest occupant when the pool runs dry; rows then also
-report ``preemptions`` and page utilization/fragmentation). Wall times on
-this host are CPU numbers — a functional serving benchmark, not a TPU
-projection.
+report ``preemptions`` and page utilization/fragmentation), and
+``priority_mix`` (a ragged batch carrying deterministic rid-derived
+priorities, admitted by the PriorityScheduler — the row's exact
+``sched_reorders`` counter pins the policy's behavior in the regression
+gate; per-request streams still match the FCFS reference for
+slot-independent families, which is what ``--check`` asserts on the dense
+arch). Wall times on this host are CPU numbers — a functional serving
+benchmark, not a TPU projection.
+
+Device rows are driven through the ``LLMEngine`` facade
+(``generate(prompts, sampling_params)``); the host-driven reference rows
+keep the raw submit/run loop that engine predates.
 
     PYTHONPATH=src python benchmarks/serve_bench.py                # bench
     PYTHONPATH=src python benchmarks/serve_bench.py --compare      # + ref
@@ -67,10 +76,15 @@ def _mix_lengths(mix: str, rng) -> list[int]:
         # to whole pages) far exceeds OVERSUB_PAGES * PAGE_SIZE rows, so a
         # paged engine must oversubscribe and preempt
         return [int(n) for n in rng.integers(40, 81, 10)]
+    if mix == "priority_mix":
+        # ragged batch with rid-derived priorities (see build_requests):
+        # the PriorityScheduler must reorder admission deterministically
+        return [int(n) for n in rng.integers(6, 33, 12)]
     raise KeyError(f"unknown mix {mix!r}; have {sorted(MIXES)}")
 
 
-MIXES = ("uniform_short", "long_tail", "ragged_burst", "oversubscribed")
+MIXES = ("uniform_short", "long_tail", "ragged_burst", "oversubscribed",
+         "priority_mix")
 
 # paged-pool geometry for the oversubscribed mix: 4 slots x 128 max_seq
 # would fully subscribe 32 pages of 16; 12 pages force admission queueing
@@ -78,7 +92,8 @@ MIXES = ("uniform_short", "long_tail", "ragged_burst", "oversubscribed")
 # families simply ignores these knobs)
 PAGE_SIZE, OVERSUB_PAGES = 16, 12
 MIX_ENGINE_KW = {"oversubscribed": {"page_size": PAGE_SIZE,
-                                    "num_pages": OVERSUB_PAGES}}
+                                    "num_pages": OVERSUB_PAGES},
+                 "priority_mix": {"scheduler": "priority"}}
 MIX_MAX_NEW = {"oversubscribed": 24}
 
 
@@ -95,23 +110,17 @@ def build_requests(cfg, mix: str, *, seed: int = SEED,
             prompt = rng.standard_normal((n, cfg.d_model)).astype(np.float32)
         else:
             prompt = rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
-        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=max_new))
+        # deterministic rid-derived priority spread (only the priority
+        # scheduler reads it; the field's presence cannot perturb FCFS)
+        prio = (rid * 5) % 3 if mix == "priority_mix" else 0
+        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=max_new,
+                            priority=prio))
     return reqs
 
 
-def run_engine(engine, requests) -> dict:
-    """Drive one engine over a request list; returns metrics + streams."""
-    t0 = time.perf_counter()
-    for r in requests:
-        engine.submit(r)
-    done = engine.run()
-    wall = time.perf_counter() - t0
-    toks = sum(len(r.out_tokens) for r in done)
-    ttfts = [r.t_first - r.t_submit for r in done
-             if getattr(r, "t_first", 0) and getattr(r, "t_submit", 0)]
-    stats = engine.stats() if hasattr(engine, "stats") else {}
+def _metrics_row(wall, toks, ttfts, stats, streams) -> dict:
     row = {
-        "requests": len(done),
+        "requests": len(streams),
         "tokens": toks,
         "wall_s": wall,
         "tok_per_s": toks / wall if wall else 0.0,
@@ -120,8 +129,11 @@ def run_engine(engine, requests) -> dict:
         "prefill_compiles": stats.get("prefill_compiles"),
         "paged": stats.get("paged", False),
         "preemptions": stats.get("preemptions", 0),
-        "streams": {r.rid: list(r.out_tokens) for r in done},
+        "streams": streams,
     }
+    if "scheduler" in stats:
+        row["scheduler"] = stats["scheduler"]
+        row["sched_reorders"] = stats["sched_reorders"]
     if stats.get("paged"):
         row.update({
             "page_size": stats["page_size"],
@@ -131,6 +143,37 @@ def run_engine(engine, requests) -> dict:
             "page_frag_mean": round(stats["page_frag_mean"], 4),
         })
     return row
+
+
+def run_engine(engine, requests) -> dict:
+    """Drive one raw engine over pre-built Requests (the reference path)."""
+    t0 = time.perf_counter()
+    for r in requests:
+        engine.submit(r)
+    done = engine.run()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    ttfts = [r.t_first - r.t_submit for r in done
+             if getattr(r, "t_first", 0) and getattr(r, "t_submit", 0)]
+    stats = engine.stats() if hasattr(engine, "stats") else {}
+    return _metrics_row(wall, toks, ttfts, stats,
+                        {r.rid: list(r.out_tokens) for r in done})
+
+
+def run_llm(llm, requests) -> dict:
+    """Drive the LLMEngine facade over the same request list (device
+    path): prompts + per-request knobs in, RequestOutputs out — no
+    submit/run/out_tokens scraping."""
+    t0 = time.perf_counter()
+    outs = llm.generate(
+        [r.prompt for r in requests],
+        max_new_tokens=[r.max_new_tokens for r in requests],
+        priorities=[r.priority for r in requests])
+    wall = time.perf_counter() - t0
+    toks = sum(len(o.tokens) for o in outs)
+    ttfts = [o.ttft_s for o in outs if o.ttft_s is not None]
+    return _metrics_row(wall, toks, ttfts, llm.stats(),
+                        {o.rid: list(o.tokens) for o in outs})
 
 
 def reference_rows(arch: str, mixes=MIXES, *, seed: int = SEED) -> list[dict]:
@@ -187,27 +230,37 @@ def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
     import jax
     from repro import configs
     from repro.models import registry
-    from repro.serving.engine import Engine
+    from repro.serving import LLMEngine
 
     cfg = configs.smoke(arch)
     params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
     rows = []
     for mix in mixes:
+        llm = LLMEngine(params, cfg, slots=SLOTS, max_seq=MAX_SEQ,
+                        **MIX_ENGINE_KW.get(mix, {}))
         rows.append({"arch": arch, "mix": mix, "engine": "device",
-                     **run_engine(Engine(params, cfg, slots=SLOTS,
-                                         max_seq=MAX_SEQ,
-                                         **MIX_ENGINE_KW.get(mix, {})),
-                                  build_requests(cfg, mix, seed=seed))})
+                     **run_llm(llm, build_requests(cfg, mix, seed=seed))})
     if compare or check:
         refs = {r["mix"]: r for r in
                 _reference_rows_subprocess(arch, mixes, seed)}
+        # per-request streams equal the FCFS reference only when decode is
+        # slot-independent (the PAGED_OK property): under a reordering
+        # scheduler, slot-coupled families (MoE capacity routing) see a
+        # different pool composition, so there is no FCFS oracle for them
+        slot_independent = bool(getattr(registry.module_for(cfg),
+                                        "PAGED_OK", False))
         for row in list(rows):
             ref = refs[row["mix"]]
             row["speedup_vs_reference"] = (ref["wall_s"] / row["wall_s"]
                                            if row["wall_s"] else None)
-            row["streams_match_reference"] = (
-                {str(k): v for k, v in row["streams"].items()}
-                == {str(k): v for k, v in ref["streams"].items()})
+            sched = MIX_ENGINE_KW.get(row["mix"], {}).get("scheduler",
+                                                          "fcfs")
+            if sched != "fcfs" and not slot_independent:
+                row["streams_match_reference"] = None   # no oracle
+            else:
+                row["streams_match_reference"] = (
+                    {str(k): v for k, v in row["streams"].items()}
+                    == {str(k): v for k, v in ref["streams"].items()})
             rows.append(ref)
     return rows
 
@@ -267,10 +320,15 @@ def print_rows(rows):
             paged = (f",preempt={r['preemptions']},"
                      f"pages={r['peak_pages_in_use']}/{r['num_pages']},"
                      f"frag={r['page_frag_mean']:.2f}")
+        sched = ""
+        if r.get("scheduler") and r["scheduler"] != "fcfs":
+            sched = (f",sched={r['scheduler']},"
+                     f"reorders={r['sched_reorders']}")
         print(f"serving/{r['arch']}/{r['mix']}/{r['engine']},{us:.0f},"
               f"tok_s={r['tok_per_s']:.1f},ttft_ms={ttft},"
               f"steps={r['steps']},"
-              f"prefill_compiles={r['prefill_compiles']}{paged}{extra}")
+              f"prefill_compiles={r['prefill_compiles']}{sched}{paged}"
+              f"{extra}")
 
 
 def bench(archs=DEFAULT_ARCHS, mixes=MIXES, *, compare: bool = False,
@@ -316,8 +374,10 @@ def main(argv=None) -> int:
     print_rows(rows)
     rc = 0
     if args.check:
+        # None = no FCFS oracle (reordering scheduler on a slot-coupled
+        # family) — skipped, not failed
         bad = [r for r in rows if r["engine"] == "device"
-               and not r.get("streams_match_reference")]
+               and r.get("streams_match_reference") is False]
         for r in bad:
             print(f"# STREAM MISMATCH vs reference: "
                   f"{r['arch']}/{r['mix']}")

@@ -1,13 +1,17 @@
-"""Serve a small model with batched requests through the device-resident
-continuous-batching engine: one donated jit-ed step per decode token
-(model forward + greedy sampling + stop conditions on device, overlapped
-host readback), bucketed pow2 prefill admission, and the flash-decode
-kernel (paper Kernel 1's merge, paged form) on the attention path.
+"""Serve a small model through the layered serving API: ``LLMEngine``
+over the device-resident continuous-batching engine — one donated jit-ed
+step per decode token with sampling (greedy or temperature/top-k/top-p)
+fused on device, pluggable admission scheduling, and the unified cache
+manager (bucketed pow2 prefill, paged KV via the flash-decode kernel).
 
-The second run oversubscribes the paged KV pool (8 pages x 16 rows vs
-3 slots x 128 positions), so admission queues on free pages and the
-engine preempts + swaps the youngest occupant — the printed stats show
-preemptions and page utilization/fragmentation.
+Three runs:
+1. greedy FCFS — the bit-exact baseline configuration;
+2. seeded non-greedy sampling (temperature + nucleus) — still one batched
+   host readback per step, reproducible per seed;
+3. an oversubscribed paged pool (8 pages x 16 rows vs 3 slots x 128
+   positions) under priority scheduling — admission queues on free pages
+   and the engine preempts + swaps the youngest occupant; the stats line
+   shows the policy, preemptions, and page utilization/fragmentation.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -15,6 +19,10 @@ from repro.launch.serve import run
 
 run(arch="qwen2-0.5b", requests=6, slots=3, max_new=8, max_seq=128)
 
-print("\n--- oversubscribed paged pool ---")
+print("\n--- seeded sampling (temperature 0.8, top-p 0.95) ---")
+run(arch="qwen2-0.5b", requests=6, slots=3, max_new=8, max_seq=128,
+    temperature=0.8, top_p=0.95, sampling_seed=7)
+
+print("\n--- oversubscribed paged pool, priority admission ---")
 run(arch="qwen2-0.5b", requests=8, slots=3, max_new=24, max_seq=128,
-    prompt_len=48, num_pages=8)
+    prompt_len=48, num_pages=8, scheduler="priority")

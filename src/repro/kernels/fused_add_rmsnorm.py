@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import ref
-from repro.kernels._common import cdiv, pad_rows, round_up, sublane_for
+from repro.kernels._common import pad_rows, round_up, sublane_for
 from repro.kernels.registry import (KernelSpace, Knob, TestCase,
                                     register_kernel_space)
 

@@ -70,7 +70,6 @@ def lower_cell(cfg: ModelConfig, spec: ShapeSpec, mesh, *,
         step = make_train_step(cfg, tcfg, param_shardings=p_sh)
         o_specs = jax.eval_shape(
             lambda p: {"opt": opt.init(p)}, p_specs)
-        o_axes = {"opt": opt.state_axes(p_axes)}
         o_sh = {"opt": opt.OptState(
             jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
             rules.tree_shardings(o_specs["opt"].m, p_axes, mesh),

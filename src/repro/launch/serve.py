@@ -1,12 +1,16 @@
-"""Serving driver: device-resident continuous-batching engine over the
-fused decode step (on-device sampling + stop conditions, bucketed prefill,
-paged KV pool with preemption for PAGED_OK families).
+"""Serving driver over the layered API: ``LLMEngine.generate`` on top of
+SamplingParams (greedy / temperature / top-k / top-p, per-request seed),
+a pluggable scheduler (fcfs / priority / sjf), and the unified cache
+manager (contiguous or paged KV with preemption for PAGED_OK families).
 
 CPU-runnable:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --requests 6 --slots 3 --max-new 8
-    # oversubscribed paged pool (forces preemption + swap-in):
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+    # non-greedy, seeded (reproducible):
+    PYTHONPATH=src python -m repro.launch.serve --temperature 0.8 \
+        --top-k 40 --top-p 0.95 --seed 7
+    # priority admission over an oversubscribed paged pool:
+    PYTHONPATH=src python -m repro.launch.serve --scheduler priority \
         --requests 8 --prompt-len 48 --max-new 24 --num-pages 12
 """
 
@@ -20,40 +24,55 @@ import numpy as np
 
 from repro import configs
 from repro.models import registry
-from repro.serving.engine import Engine, Request
+from repro.serving import LLMEngine, SamplingParams
 
 
 def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
         slots: int = 3, max_new: int = 8, max_seq: int = 128,
         prompt_len: int = 16, seed: int = 0, verbose: bool = True,
-        page_size: int = 16, num_pages: int | None = None):
+        page_size: int = 16, num_pages: int | None = None,
+        scheduler: str = "fcfs", temperature: float = 0.0,
+        top_k: int = 0, top_p: float = 1.0,
+        sampling_seed: int | None = None):
     cfg = configs.smoke(arch) if smoke else configs.get(arch)
     params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
-    engine = Engine(params, cfg, slots=slots, max_seq=max_seq,
-                    page_size=page_size, num_pages=num_pages)
+    llm = LLMEngine(params, cfg, slots=slots, max_seq=max_seq,
+                    scheduler=scheduler, page_size=page_size,
+                    num_pages=num_pages)
+    sp = SamplingParams(temperature=temperature, top_k=top_k, top_p=top_p,
+                        seed=sampling_seed)
     rng = np.random.default_rng(seed)
-    t0 = time.perf_counter()
-    for rid in range(requests):
+    prompts = []
+    for _ in range(requests):
         n = int(rng.integers(4, prompt_len + 1))
         if cfg.frontend == "frames":
-            prompt = rng.standard_normal((n, cfg.d_model)).astype(np.float32)
+            prompts.append(rng.standard_normal((n, cfg.d_model))
+                           .astype(np.float32))
         else:
-            prompt = rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
-        engine.submit(Request(rid=rid, prompt=prompt,
-                              max_new_tokens=max_new))
-    done = engine.run()
+            prompts.append(rng.integers(0, cfg.vocab, (n,), dtype=np.int32))
+    # under non-FCFS schedulers, give the batch a deterministic priority
+    # spread so the policy has something to reorder
+    priorities = [rid % 3 for rid in range(requests)]
+    t0 = time.perf_counter()
+    outs = llm.generate(prompts, sp, max_new_tokens=max_new,
+                        priorities=priorities)
     dt = time.perf_counter() - t0
-    total_tokens = sum(len(r.out_tokens) for r in done)
+    total_tokens = sum(len(o.tokens) for o in outs)
     if verbose:
-        for r in sorted(done, key=lambda r: r.rid):
-            print(f"req {r.rid}: prompt[{len(r.prompt)}] -> "
-                  f"{r.out_tokens}")
-        s = engine.stats()
-        ttfts = [r.t_first - r.t_submit for r in done if r.t_first]
-        print(f"{len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
+        for o in outs:
+            print(f"req {o.rid}: prompt[{o.prompt_len}] -> {o.tokens}")
+        s = llm.stats()
+        ttfts = [o.ttft_s for o in outs if o.ttft_s is not None]
+        mode = "greedy" if sp.greedy else (
+            f"T={sp.temperature:g}"
+            + (f",top_k={sp.top_k}" if sp.top_k else "")
+            + (f",top_p={sp.top_p:g}" if sp.top_p < 1 else ""))
+        print(f"{len(outs)} requests, {total_tokens} tokens in {dt:.2f}s "
               f"({total_tokens/dt:.1f} tok/s, continuous batching x{slots}, "
               f"ttft {np.mean(ttfts)*1e3:.0f}ms, {s['steps']} steps, "
-              f"{s['prefill_compiles']} prefill compiles)")
+              f"{s['prefill_compiles']} prefill compiles, "
+              f"sampling={mode}, scheduler={s['scheduler']} "
+              f"({s['sched_reorders']} reorders)")
         if s["paged"]:
             print(f"paged pool: {s['num_pages']} pages x {s['page_size']} "
                   f"rows ({s['preempt_mode']} preemption) — "
@@ -61,7 +80,7 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
                   f"peak {s['peak_pages_in_use']}/{s['num_pages']} pages, "
                   f"mean util {s['page_util_mean']:.0%}, "
                   f"frag {s['page_frag_mean']:.0%}")
-    return done
+    return outs
 
 
 def main():
@@ -77,11 +96,26 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="paged-pool size; below slots*max_seq/page_size "
                          "oversubscribes (admission queues + preemption)")
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=["fcfs", "priority", "sjf"],
+                    help="admission policy (requests carry rid%%3 "
+                         "priorities so 'priority' visibly reorders)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax (default); >0 samples")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=None, dest="sampling_seed",
+                    help="per-request sampling seed (default: request id, "
+                         "so runs are reproducible but requests diverge)")
     args = ap.parse_args()
     run(arch=args.arch, requests=args.requests, slots=args.slots,
         max_new=args.max_new, max_seq=args.max_seq,
         prompt_len=args.prompt_len, page_size=args.page_size,
-        num_pages=args.num_pages)
+        num_pages=args.num_pages, scheduler=args.scheduler,
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        sampling_seed=args.sampling_seed)
 
 
 if __name__ == "__main__":

@@ -297,7 +297,6 @@ def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
                 seq_shard_axis=None):
-    b = token.shape[0]
     x = L.embed_tokens(params["embed"], token[:, None]).astype(cfg.jnp_dtype)
     w = cfg.window
     slot = pos % w if w else pos

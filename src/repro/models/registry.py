@@ -90,6 +90,32 @@ def decode_step_paged(params, cfg: ModelConfig, pool, page_table, token,
         seq_shard_axis=seq_shard_axis)
 
 
+def decode_cached(params, cfg: ModelConfig, cache, token, pos, *,
+                  page_table=None, seq_shard_axis=None):
+    """One decode step against either cache layout — the single decode
+    surface the serving ``CacheManager`` implementations dispatch through:
+    ``page_table=None`` selects the contiguous per-slot pool,
+    a ``[B, pages_per_slot]`` table selects the paged block pool."""
+    if page_table is None:
+        return decode_step(params, cfg, cache, token, pos,
+                           seq_shard_axis=seq_shard_axis)
+    return decode_step_paged(params, cfg, cache, page_table, token, pos,
+                             seq_shard_axis=seq_shard_axis)
+
+
+def write_cached(cfg: ModelConfig, cache, new, *, slot=None, pages=None,
+                 max_seq=None, page_size=None):
+    """Scatter one request's prefill cache into either layout — the single
+    write surface behind ``CacheManager.write``: pass ``slot`` (+
+    ``max_seq``) for the contiguous pool or ``pages`` (+ ``page_size``)
+    for the paged pool. Exactly one of ``slot``/``pages`` must be given."""
+    if (slot is None) == (pages is None):
+        raise ValueError("write_cached wants exactly one of slot= / pages=")
+    if pages is not None:
+        return write_pages(cfg, cache, new, pages, page_size)
+    return write_slot(cfg, cache, new, slot, max_seq)
+
+
 def write_slot(cfg: ModelConfig, pool, new, slot, max_seq: int):
     """Scatter one request's prefill cache (batch=1) into pool slot ``slot``.
 

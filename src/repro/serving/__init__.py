@@ -1,7 +1,40 @@
-"""Continuous-batching serving: the device-resident engine and the
-host-driven reference implementation it is proven bit-identical against."""
+"""Layered continuous-batching serving stack.
 
+Four public layers, vLLM/SGLang-style, over one device-resident core:
+
+* ``SamplingParams`` (``repro.serving.sampling``) — greedy / temperature /
+  top-k / top-p with a per-request seed, fused into the donated decode
+  step.
+* ``Scheduler`` / ``PreemptionPolicy`` (``repro.serving.scheduler``) —
+  pluggable admission order (FCFS / priority / SJF) and eviction policy
+  (youngest-victim swap / recompute).
+* ``CacheManager`` (``repro.serving.cache_manager``) — the contiguous and
+  paged KV layouts behind one alloc/write/grow/evict/restore surface.
+* ``LLMEngine`` (``repro.serving.api``) — ``generate()`` / ``stream()``
+  facade over the engine.
+
+``Engine`` is the execution core; ``ReferenceEngine`` is the host-driven
+loop it is proven bit-identical against (greedy FCFS).
+"""
+
+from repro.serving.api import LLMEngine, RequestOutput, TokenEvent
+from repro.serving.cache_manager import (CacheConfig, CacheManager,
+                                         ContiguousCacheManager,
+                                         PagedCacheManager)
 from repro.serving.engine import Engine, Request
 from repro.serving.reference import ReferenceEngine
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import (FCFSScheduler, PreemptionPolicy,
+                                     PriorityScheduler, RecomputePreemption,
+                                     Scheduler, SJFScheduler,
+                                     SwapPreemption, make_preemption,
+                                     make_scheduler)
 
-__all__ = ["Engine", "Request", "ReferenceEngine"]
+__all__ = [
+    "CacheConfig", "CacheManager", "ContiguousCacheManager", "Engine",
+    "FCFSScheduler", "LLMEngine", "PagedCacheManager", "PreemptionPolicy",
+    "PriorityScheduler", "RecomputePreemption", "ReferenceEngine",
+    "Request", "RequestOutput", "SJFScheduler", "SamplingParams",
+    "Scheduler", "SwapPreemption", "TokenEvent", "make_preemption",
+    "make_scheduler",
+]

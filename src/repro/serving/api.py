@@ -1,0 +1,177 @@
+"""Facade layer of the serving API: ``LLMEngine``.
+
+Callers who don't want to manage ``Request`` objects, drive ``step()``,
+or scrape ``Request.out_tokens`` get two entry points over the
+device-resident engine:
+
+    generate(prompts, sampling_params) -> list[RequestOutput]
+        Submit a batch, run it to completion, return per-request outputs
+        in submission order.
+
+    stream(prompts, sampling_params) -> iterator[TokenEvent]
+        Same submission, but yields per-token events incrementally as the
+        engine's overlapped readbacks land — tokens of concurrent requests
+        interleave, each event carries (rid, token, index, done).
+
+Both accept a single ``SamplingParams`` for the whole batch or one per
+prompt, per-request ``max_new_tokens`` / ``priorities``, and share the
+engine's slots/cache across calls (request ids keep increasing), so a
+long-lived ``LLMEngine`` serves successive waves the way the paper's
+SGLang substrate does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.cache_manager import CacheConfig
+from repro.serving.engine import Engine, Request
+from repro.serving.sampling import SamplingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One decoded token of one request, in stream order."""
+    rid: int
+    token: int
+    index: int          # 0-based position within the request's output
+    done: bool          # True on the request's final token
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """Completed request: the full output stream plus serving metadata."""
+    rid: int
+    prompt_len: int
+    tokens: list
+    ttft_s: Optional[float] = None      # submit -> first token
+    preemptions: int = 0
+
+
+SamplingLike = Union[SamplingParams, Sequence[SamplingParams], None]
+
+
+class LLMEngine:
+    """vLLM-style facade over the layered serving stack.
+
+    ``scheduler`` is a policy name (``"fcfs"`` / ``"priority"`` /
+    ``"sjf"``) or a ``Scheduler`` instance; ``preemption`` likewise
+    (``"swap"`` / ``"recompute"``); ``page_size`` / ``num_pages`` /
+    ``paged`` configure the cache manager (auto-selects paged for
+    families that support it; ``num_pages`` below full subscription
+    oversubscribes)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 max_seq: int = 512, scheduler="fcfs", preemption="swap",
+                 paged: Optional[bool] = None, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 sampling: Optional[SamplingParams] = None):
+        self.cfg = cfg
+        self.engine = Engine(
+            params, cfg, slots=slots, max_seq=max_seq, sampling=sampling,
+            scheduler=scheduler, preemption=preemption,
+            cache_manager=CacheConfig(paged=paged, page_size=page_size,
+                                      num_pages=num_pages))
+        self._next_rid = 0
+
+    # -- submission ----------------------------------------------------------
+
+    def _submit(self, prompts: Iterable, sampling_params: SamplingLike,
+                max_new_tokens, priorities) -> list[Request]:
+        prompts = list(prompts)
+        n = len(prompts)
+        if isinstance(sampling_params, SamplingParams) \
+                or sampling_params is None:
+            sampling_params = [sampling_params] * n
+        if len(sampling_params) != n:
+            raise ValueError(f"{len(sampling_params)} sampling_params for "
+                             f"{n} prompts")
+        if isinstance(max_new_tokens, int):
+            max_new_tokens = [max_new_tokens] * n
+        elif len(max_new_tokens) != n:
+            raise ValueError(f"{len(max_new_tokens)} max_new_tokens for "
+                             f"{n} prompts")
+        priorities = list(priorities) if priorities is not None else [0] * n
+        if len(priorities) != n:
+            raise ValueError(f"{len(priorities)} priorities for {n} prompts")
+        reqs = []
+        for prompt, sp, mnt, prio in zip(prompts, sampling_params,
+                                         max_new_tokens, priorities):
+            req = Request(rid=self._next_rid, prompt=np.asarray(prompt),
+                          max_new_tokens=int(mnt), sampling=sp,
+                          priority=int(prio))
+            self._next_rid += 1
+            self.engine.submit(req)
+            reqs.append(req)
+        return reqs
+
+    # -- entry points --------------------------------------------------------
+
+    def stream(self, prompts: Iterable, sampling_params: SamplingLike = None,
+               *, max_new_tokens=16, priorities=None,
+               max_steps: int = 10_000) -> Iterator[TokenEvent]:
+        """Submit ``prompts`` and yield ``TokenEvent``s as tokens land.
+
+        Events of concurrent requests interleave; per request they arrive
+        in stream order with ``done=True`` on the last one. The engine's
+        one-step readback overlap is preserved — an event can trail its
+        dispatch by one step, never more."""
+        reqs = self._submit(prompts, sampling_params, max_new_tokens,
+                            priorities)
+        emitted = {req.rid: 0 for req in reqs}
+
+        def new_events():
+            for req in reqs:
+                while emitted[req.rid] < len(req.out_tokens):
+                    i = emitted[req.rid]
+                    emitted[req.rid] += 1
+                    yield TokenEvent(
+                        rid=req.rid, token=req.out_tokens[i], index=i,
+                        done=req.done and emitted[req.rid]
+                        == len(req.out_tokens))
+
+        steps = max_steps
+        while steps > 0 and self.engine.has_work():
+            if not self.engine.step():
+                break
+            steps -= 1
+            yield from new_events()
+        self.engine.flush()
+        yield from new_events()
+        self._release(reqs)
+
+    def generate(self, prompts: Iterable,
+                 sampling_params: SamplingLike = None, *,
+                 max_new_tokens=16, priorities=None,
+                 max_steps: int = 10_000) -> list[RequestOutput]:
+        """Submit ``prompts``, run to completion, return outputs in
+        submission order."""
+        reqs = self._submit(prompts, sampling_params, max_new_tokens,
+                            priorities)
+        self.engine.run(max_steps=max_steps)
+        outs = []
+        for req in reqs:
+            ttft = (req.t_first - req.t_submit) if req.t_first else None
+            outs.append(RequestOutput(
+                rid=req.rid, prompt_len=len(req.prompt),
+                tokens=list(req.out_tokens), ttft_s=ttft,
+                preemptions=req.preemptions))
+        self._release(reqs)
+        return outs
+
+    def _release(self, reqs) -> None:
+        """Drop this wave's completed Requests from the engine's finished
+        list (by identity — Request equality touches numpy prompts) so a
+        long-lived facade doesn't retain every prompt ever served."""
+        done = {id(r) for r in reqs}
+        self.engine.finished = [r for r in self.engine.finished
+                                if id(r) not in done]
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> dict:
+        return self.engine.stats()

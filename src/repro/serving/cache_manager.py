@@ -1,0 +1,275 @@
+"""Cache-management layer of the serving API: one ``alloc / write / grow /
+evict / restore`` surface over both KV-cache layouts.
+
+The engine used to special-case "contiguous ``slots x max_seq`` pool" vs
+"``PagePool`` + page tables" inline at every call site; the two layouts now
+sit behind one interface:
+
+    alloc(slot, n_tokens)   all-or-nothing admission hold for a prompt
+    write(cache, kv, slot)  traced prefill scatter (called inside jit)
+    grow(slot)              back one more decode write (paged: one page)
+    evict(slot)             release the slot's residency
+    restore(slot, n_pages)  re-hold for a swap-preempted victim
+
+plus the small queries the engine's dispatch loop needs (``backed``,
+``has_free``, ``step_extra``, ``prefill_pages``, ``read``) and per-step
+pool statistics. The traced paths dispatch through the registry's unified
+``decode_cached`` / ``write_cached`` surface, so a manager works for any
+family whose cache layout the registry describes.
+
+``ContiguousCacheManager`` is the trivial implementation (every slot
+permanently owns ``max_seq`` rows: alloc/grow always succeed, evict is a
+no-op). ``PagedCacheManager`` owns the ``PagePool`` bookkeeping and the
+trap-padded page vectors the jitted admission consumes. ``CacheConfig`` is
+the declarative form (``paged=None`` auto-selects per family) that the
+``Engine`` and the ``LLMEngine`` facade resolve with their own
+cfg/slots/max_seq.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.models import registry
+from repro.serving.paging import PagePool
+
+
+class CacheManager:
+    """Interface; see module docstring for the contract."""
+
+    paged: bool = False
+
+    # -- residency (host side) ----------------------------------------------
+    def alloc(self, slot: int, n_tokens: int) -> bool:
+        raise NotImplementedError
+
+    def grow(self, slot: int) -> bool:
+        raise NotImplementedError
+
+    def evict(self, slot: int) -> None:
+        raise NotImplementedError
+
+    def restore(self, slot: int, n_pages: int) -> bool:
+        raise NotImplementedError
+
+    # -- traced (called inside jit) -----------------------------------------
+    def init(self):
+        """Fresh device cache tree for this layout."""
+        raise NotImplementedError
+
+    def write(self, cache, kv, *, slot=None, pages=None):
+        """Scatter one request's prefill cache into the pool."""
+        raise NotImplementedError
+
+    def decode(self, params, cache, token, pos, page_table=None):
+        """One fused decode step over the pool (traced)."""
+        return registry.decode_cached(params, self.cfg, cache, token, pos,
+                                      page_table=page_table)
+
+    def read(self, cache, pages):
+        """Gather whole pages back into prefill layout (swap-out)."""
+        raise NotImplementedError
+
+    # -- dispatch-loop queries ----------------------------------------------
+    def backed(self, slot: int, write_pos: int) -> bool:
+        """Is ``write_pos`` already storage-backed for ``slot``?"""
+        return True
+
+    @property
+    def has_free(self) -> bool:
+        return True
+
+    def step_extra(self) -> tuple:
+        """Per-dispatch host-owned args for the fused step (page table)."""
+        return ()
+
+    def prefill_pages(self, slot: int, n_tokens: int,
+                      bucket_len: Optional[int]) -> Optional[np.ndarray]:
+        """Physical destinations for a prompt's logical pages (trap-padded
+        to the bucket so the jit compile key stays the bucket shape);
+        None for the contiguous layout."""
+        return None
+
+    def pages_of(self, slot: int) -> Optional[np.ndarray]:
+        return None
+
+    def note_step(self, used_rows: int) -> None:
+        """Record one dispatch's occupancy for utilization stats."""
+
+    def stats(self) -> dict:
+        return {"paged": self.paged}
+
+
+class ContiguousCacheManager(CacheManager):
+    """Every slot permanently owns a ``max_seq`` stripe of the pool — the
+    historical layout. Residency management degenerates: admission always
+    fits, growth never exhausts, eviction frees nothing."""
+
+    paged = False
+
+    def __init__(self, cfg, slots: int, max_seq: int):
+        self.cfg, self.slots, self.max_seq = cfg, slots, max_seq
+
+    def init(self):
+        cache, _ = registry.init_cache(self.cfg, self.slots, self.max_seq)
+        return cache
+
+    def alloc(self, slot: int, n_tokens: int) -> bool:
+        return True
+
+    def grow(self, slot: int) -> bool:
+        return True
+
+    def evict(self, slot: int) -> None:
+        pass
+
+    def restore(self, slot: int, n_pages: int) -> bool:
+        return True
+
+    def write(self, cache, kv, *, slot=None, pages=None):
+        return registry.write_cached(self.cfg, cache, kv, slot=slot,
+                                     max_seq=self.max_seq)
+
+    def read(self, cache, pages):
+        raise NotImplementedError("contiguous slots are never swapped out")
+
+
+class PagedCacheManager(CacheManager):
+    """SGLang/vLLM-style paged layout: a global ``[num_pages + 1,
+    page_size, ...]`` block pool (physical page 0 is the trap page) plus
+    per-slot page tables. ``num_pages`` below ``slots * max_seq /
+    page_size`` oversubscribes: ``alloc``/``grow`` then report exhaustion
+    and the engine preempts."""
+
+    paged = True
+
+    def __init__(self, cfg, slots: int, max_seq: int, *,
+                 page_size: int = 16, num_pages: Optional[int] = None):
+        if not registry.paged_ok(cfg):
+            raise ValueError(f"family {cfg.family!r} (window={cfg.window}) "
+                             "cannot serve from a paged pool")
+        if max_seq % page_size:
+            raise ValueError(f"page_size={page_size} must divide "
+                             f"max_seq={max_seq} (the gathered logical "
+                             "cache must tile exactly)")
+        self.cfg, self.slots, self.max_seq = cfg, slots, max_seq
+        self.page_size = page_size
+        self.pages_per_slot = max_seq // page_size
+        if num_pages is None:
+            num_pages = slots * self.pages_per_slot   # full subscription
+        self.num_pages = num_pages
+        self.pool = PagePool(num_pages, page_size, slots,
+                             self.pages_per_slot)
+        self._peak = 0
+        self._util_sum = 0.0
+        self._frag_sum = 0.0
+        self._steps = 0
+
+    def init(self):
+        # +1: physical page 0 is the trap page (see repro.serving.paging)
+        cache, _ = registry.init_paged_cache(self.cfg, self.num_pages + 1,
+                                             self.page_size)
+        return cache
+
+    # -- residency ----------------------------------------------------------
+    def _n_pages(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def alloc(self, slot: int, n_tokens: int) -> bool:
+        return self.pool.alloc_n(slot, self._n_pages(n_tokens))
+
+    def grow(self, slot: int) -> bool:
+        return self.pool.alloc(slot)
+
+    def evict(self, slot: int) -> None:
+        self.pool.release(slot)
+
+    def restore(self, slot: int, n_pages: int) -> bool:
+        return self.pool.alloc_n(slot, n_pages)
+
+    # -- traced -------------------------------------------------------------
+    def write(self, cache, kv, *, slot=None, pages=None):
+        return registry.write_cached(self.cfg, cache, kv, pages=pages,
+                                     page_size=self.page_size)
+
+    def read(self, cache, pages):
+        return registry.read_pages(self.cfg, cache, pages, self.page_size)
+
+    # -- dispatch-loop queries ----------------------------------------------
+    def backed(self, slot: int, write_pos: int) -> bool:
+        return write_pos // self.page_size < len(self.pool.owned[slot])
+
+    @property
+    def has_free(self) -> bool:
+        return self.pool.num_free > 0
+
+    def step_extra(self) -> tuple:
+        return (self.pool.table,)
+
+    def prefill_pages(self, slot: int, n_tokens: int,
+                      bucket_len: Optional[int]) -> np.ndarray:
+        n_real = self._n_pages(n_tokens)
+        plen = bucket_len if bucket_len is not None else n_tokens
+        b_pages = max(1, self._n_pages(plen))
+        pages = np.zeros((b_pages,), np.int32)        # bucket tail -> trap
+        pages[:n_real] = self.pool.owned[slot]
+        return pages
+
+    def pages_of(self, slot: int) -> np.ndarray:
+        return np.asarray(self.pool.owned[slot], np.int32)
+
+    def note_step(self, used_rows: int) -> None:
+        in_use = self.pool.pages_in_use
+        self._steps += 1
+        self._peak = max(self._peak, in_use)
+        self._util_sum += in_use / self.num_pages
+        alloc_rows = in_use * self.page_size
+        if alloc_rows:
+            self._frag_sum += 1.0 - min(used_rows, alloc_rows) / alloc_rows
+
+    def stats(self) -> dict:
+        steps = max(self._steps, 1)
+        return {
+            "paged": True,
+            "page_size": self.page_size,
+            "num_pages": self.num_pages,
+            "peak_pages_in_use": self._peak,
+            # time-averaged pool occupancy and internal fragmentation
+            # (allocated-but-unwritten rows / allocated rows)
+            "page_util_mean": self._util_sum / steps,
+            "page_frag_mean": self._frag_sum / steps,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Declarative cache-manager choice, resolved against the engine's
+    (cfg, slots, max_seq). ``paged=None`` auto-selects: paged when the
+    family supports it (``registry.paged_ok``), contiguous otherwise.
+    ``num_pages=None`` fully subscribes; fewer oversubscribes."""
+    paged: Optional[bool] = None
+    page_size: int = 16
+    num_pages: Optional[int] = None
+
+    def build(self, cfg, slots: int, max_seq: int) -> CacheManager:
+        paged = registry.paged_ok(cfg) if self.paged is None else self.paged
+        if self.paged and not registry.paged_ok(cfg):
+            raise ValueError(f"family {cfg.family!r} (window={cfg.window}) "
+                             "cannot serve from a paged pool")
+        if paged:
+            return PagedCacheManager(cfg, slots, max_seq,
+                                     page_size=self.page_size,
+                                     num_pages=self.num_pages)
+        return ContiguousCacheManager(cfg, slots, max_seq)
+
+
+def make_cache_manager(spec, cfg, slots: int, max_seq: int) -> CacheManager:
+    """Resolve ``None`` (auto), a ``CacheConfig``, or a ready instance."""
+    if spec is None:
+        spec = CacheConfig()
+    if isinstance(spec, CacheConfig):
+        return spec.build(cfg, slots, max_seq)
+    return spec

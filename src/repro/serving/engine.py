@@ -1,49 +1,45 @@
 """Device-resident continuous-batching serving engine.
 
 A fixed pool of decode slots; requests join as slots free up (continuous
-batching à la SGLang/vLLM). The decode hot path never leaves the device:
+batching à la SGLang/vLLM). The engine is the execution core of a layered
+serving API:
 
-* **Donated fused step** — one jit-ed program per engine runs the model
-  decode step, greedy sampling (argmax over the real vocab), stop-condition
-  evaluation (max-new-tokens / max-seq), and slot masking. The KV/state
-  pool cache and the token/pos/active/emitted buffers are donated
-  (``donate_argnums``), so on TPU/GPU the cache updates in place instead of
-  being copied every token (CPU ignores donation with a warning we
-  suppress).
-* **Overlapped readback** — the host reads ONE small batched emit
-  (token-or-minus-one, done flags) per step, and the readback of step *k*
-  is deferred until after step *k+1* has been dispatched. There is no
-  per-slot ``int(next_tok[i])`` sync anywhere.
-* **Bucketed, jitted admission** — prefill + the pool-cache scatter + slot
-  state reset are ONE jitted function whose compile key is the padded
-  prompt shape. Families whose prefill is exact under right-padding
-  (``PAD_PREFILL`` — causal attention over a positional KV cache) pad
-  prompts to power-of-two buckets, so an arbitrary request mix triggers at
-  most ``log2(max_seq)+1`` prefill compiles. Stateful families (MoE
-  capacity routing, recurrences, bidirectional encoders) prefill at exact
-  length — identical to the historical engine's compile behavior.
-* **Paged KV pool with oversubscription** — for families that declare
-  ``PAGED_OK`` (positional K/V, slot-independent decode: the dense
-  transformer), the per-slot ``slots x max_seq`` cache is replaced by a
-  global ``[num_pages, page_size, ...]`` block pool plus per-slot page
-  tables (SGLang/vLLM-style). Capacity is then bounded by *actual token
-  count*, not worst-case length: ``num_pages`` may be much smaller than
-  ``slots * max_seq / page_size``. Admission allocates whole pages and
-  writes the bucketed prefill through the axes-driven
-  ``registry.write_pages``; decode grows a slot's table one page at a time
-  and gathers K/V blocks through it (``paged_flash_decode`` kernel). When
-  the pool runs dry, the youngest occupant is **preempted**: its pages are
-  freed and the request re-queued (front) with its generated prefix folded
-  into the prompt — recompute preemption, which under greedy sampling
-  reproduces the straight-through stream exactly. Stateful families keep
-  the contiguous pool (see each family's ``PAGED_OK`` note).
+* **Sampling** (``repro.serving.sampling.SamplingParams``) — greedy /
+  temperature / top-k / top-p with a per-request seed. The draw is fused
+  into the donated decode step: a per-slot categorical draw keyed by a
+  ``jax.random`` key buffer living in the donated carry, so non-greedy
+  decode still costs ONE batched host readback per step and token *t* of a
+  request is a pure function of ``(seed, t)`` — bit-reproducible across
+  restarts, cache managers, and preemption.
+* **Scheduling** (``repro.serving.scheduler``) — admission order is a
+  pluggable ``Scheduler`` (FCFS default — bit-identical to the historical
+  deque — plus priority and shortest-job-first); victim choice and
+  eviction semantics are a ``PreemptionPolicy`` (youngest-victim swap /
+  recompute).
+* **Cache management** (``repro.serving.cache_manager``) — the contiguous
+  ``slots x max_seq`` pool and the paged ``PagePool`` + page-table layout
+  sit behind one ``CacheManager`` ``alloc/write/grow/evict/restore``
+  surface; ``CacheConfig(paged=None)`` auto-selects per family and
+  ``num_pages`` below full subscription oversubscribes (admission waits
+  for pages, decode growth preempts when the pool runs dry).
+* **Facade** (``repro.serving.api.LLMEngine``) — ``generate()`` /
+  ``stream()`` over this engine for callers who don't want to manage
+  ``Request`` objects.
 
-Token streams are bit-identical to the historical host-driven engine
-(``repro.serving.reference.ReferenceEngine``) — paged or not, preempted or
-not; asserted end-to-end in ``tests/test_serving.py``. This is the
-end-to-end consumer of all three paper kernels on TPU: flash-decode
-(with the Kernel-1 merge, paged form included), fused add-RMSNorm,
-silu-and-mul.
+The decode hot path never leaves the device: one donated jitted program
+per step (model decode + fused sampling + stop conditions + slot masking,
+``donate_argnums`` on the KV/state pool and the token/pos/active/emitted/
+key buffers), one batched ``(token-or-minus-one, done)`` host readback per
+step with step *k*'s readback overlapped against step *k+1*'s dispatch,
+and bucketed jitted prefill admission (pow2 prompt buckets for
+``PAD_PREFILL`` families, exact length for stateful ones).
+
+Greedy FCFS token streams are bit-identical to the historical host-driven
+engine (``repro.serving.reference.ReferenceEngine``) — paged or not,
+preempted or not; asserted end-to-end in ``tests/test_serving.py`` and by
+the CI golden-stream check. The old constructor kwargs (``greedy=``,
+``preempt=``, ``paged=``/``page_size=``/``num_pages=``) keep working
+through deprecation shims that forward to the new layers.
 """
 
 from __future__ import annotations
@@ -52,7 +48,6 @@ import contextlib
 import dataclasses
 import time
 import warnings
-from collections import deque
 from typing import Optional
 
 import jax
@@ -61,7 +56,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
-from repro.serving.paging import PagePool
+from repro.serving.cache_manager import CacheConfig, make_cache_manager
+from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.scheduler import make_preemption, make_scheduler
 
 
 @contextlib.contextmanager
@@ -80,12 +77,14 @@ class Request:
     rid: int
     prompt: np.ndarray                  # token ids [S] (or frames [S, D])
     max_new_tokens: int = 16
+    sampling: Optional[SamplingParams] = None   # None -> engine default
+    priority: int = 0                   # consumed by PriorityScheduler
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0               # set by Engine.submit
     t_first: float = 0.0                # wall time of the first token (TTFT)
     preemptions: int = 0                # paged engine: times evicted+requeued
-    arrival: int = -1                   # FCFS rank, stamped by Engine.submit
+    arrival: int = -1                   # submission rank, stamped by submit
     # swap-preemption payload: (host KV pages, token, pos, emitted) — the
     # victim's exact device state, restored verbatim on re-admission
     swap_state: Optional[tuple] = dataclasses.field(default=None, repr=False)
@@ -106,87 +105,100 @@ class _Slot:
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 max_seq: int = 512, greedy: bool = True,
-                 paged: Optional[bool] = None, page_size: int = 16,
-                 num_pages: Optional[int] = None, preempt: str = "swap"):
-        """``paged=None`` auto-selects: paged pool when the family supports
-        it (``registry.paged_ok``), contiguous otherwise. ``num_pages``
-        defaults to full subscription (``slots * max_seq / page_size``);
-        pass fewer to oversubscribe — admission then waits for pages and
-        decode growth preempts the youngest occupant when the pool runs
-        dry.
+                 max_seq: int = 512,
+                 sampling: Optional[SamplingParams] = None,
+                 scheduler=None, preemption=None, cache_manager=None,
+                 greedy: Optional[bool] = None,
+                 preempt: Optional[str] = None,
+                 paged: Optional[bool] = None,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None):
+        """``sampling`` is the default ``SamplingParams`` for requests that
+        don't carry their own (greedy when omitted). ``scheduler`` /
+        ``preemption`` / ``cache_manager`` take a policy name, a config,
+        or a ready instance — see ``repro.serving.scheduler`` and
+        ``repro.serving.cache_manager``.
 
-        ``preempt`` picks what eviction does with the victim's KV:
-
-        * ``"swap"`` (default) — copy its pages to host, restore the same
-          bytes on re-admission. Bit-exact: the stream provably equals the
-          never-preempted stream, so the ReferenceEngine equivalence and
-          the CI goldens hold under arbitrary preemption.
-        * ``"recompute"`` — drop the pages; re-admission folds the
-          generated prefix into the prompt and re-prefills (vLLM's
-          recompute mode). Cheaper in host memory but only *greedy-stable*:
-          prefill and decode accumulate in different orders, so a
-          near-tied argmax many steps later can flip (observed at one
-          token in ~10^3 under heavy eviction) — fine for serving, not for
-          bit-exact replay."""
-        if not greedy:
-            raise NotImplementedError("only greedy (argmax) sampling")
-        if preempt not in ("swap", "recompute"):
-            raise ValueError(f"preempt={preempt!r}: want 'swap'|'recompute'")
-        self.preempt_mode = preempt
+        ``greedy=``, ``preempt=``, and ``paged=``/``page_size=``/
+        ``num_pages=`` are the pre-layered kwargs, kept as deprecation
+        shims that forward to the new layers."""
+        if greedy is not None:
+            warnings.warn(
+                "Engine(greedy=...) is deprecated; pass "
+                "sampling=SamplingParams(...) instead", DeprecationWarning,
+                stacklevel=2)
+            if sampling is None:
+                sampling = SamplingParams() if greedy \
+                    else SamplingParams(temperature=1.0)
+        if preempt is not None:
+            warnings.warn(
+                "Engine(preempt=...) is deprecated; pass preemption= a "
+                "repro.serving.scheduler.PreemptionPolicy (or its name)",
+                DeprecationWarning, stacklevel=2)
+            if preemption is None:
+                preemption = preempt
+        if paged is not None or page_size is not None \
+                or num_pages is not None:
+            warnings.warn(
+                "Engine(paged=/page_size=/num_pages=) is deprecated; pass "
+                "cache_manager=CacheConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            if cache_manager is None:
+                cache_manager = CacheConfig(paged=paged,
+                                            page_size=page_size or 16,
+                                            num_pages=num_pages)
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_seq = slots, max_seq
         self.slots = [_Slot() for _ in range(slots)]
-        if paged and not registry.paged_ok(cfg):
-            raise ValueError(f"family {cfg.family!r} (window={cfg.window}) "
-                             "cannot serve from a paged pool")
-        self.paged = registry.paged_ok(cfg) if paged is None else bool(paged)
-        if self.paged:
-            if max_seq % page_size:
-                raise ValueError(f"page_size={page_size} must divide "
-                                 f"max_seq={max_seq} (the gathered logical "
-                                 "cache must tile exactly)")
-            self.page_size = page_size
-            self._n_pt = max_seq // page_size
-            if num_pages is None:
-                num_pages = slots * self._n_pt      # full subscription
-            self.num_pages = num_pages
-            self._pool = PagePool(num_pages, page_size, slots, self._n_pt)
-            # +1: physical page 0 is the trap page (see repro.serving.paging)
-            self.cache, _ = registry.init_paged_cache(cfg, num_pages + 1,
-                                                      page_size)
-        else:
-            self.page_size = self.num_pages = None
-            self._pool = None
-            self.cache, _ = registry.init_cache(cfg, slots, max_seq)
-        self.queue: deque[Request] = deque()
+        self.default_sampling = sampling if sampling is not None \
+            else SamplingParams()
+        self.scheduler = make_scheduler(scheduler)
+        self.preemption = make_preemption(preemption)
+        self.preempt_mode = self.preemption.mode
+        self.cm = make_cache_manager(cache_manager, cfg, slots, max_seq)
+        self.paged = self.cm.paged
+        self.page_size = getattr(self.cm, "page_size", None)
+        self.num_pages = getattr(self.cm, "num_pages", None)
+        self.cache = self.cm.init()
         self.finished: list[Request] = []
         self.preemptions = 0
         self._arrivals = 0
-        self._peak_pages = 0
-        self._util_sum = 0.0
-        self._frag_sum = 0.0
         self._pad_ok = registry.pad_prefill_ok(cfg)
-        # device-resident per-slot decode state
+        # device-resident per-slot decode state (+ per-slot sampling
+        # parameters and the per-request base PRNG keys — the key buffer
+        # rides in the donated carry with the rest)
         self._token = jnp.zeros((slots,), jnp.int32)
         self._pos = jnp.zeros((slots,), jnp.int32)
         self._active = jnp.zeros((slots,), jnp.bool_)
         self._emitted = jnp.zeros((slots,), jnp.int32)
         self._max_new = jnp.zeros((slots,), jnp.int32)
-        self._step_fn = jax.jit(self._make_step(),
-                                donate_argnums=(1, 2, 3, 4, 5))
+        self._keys = jnp.zeros((slots, 2), jnp.uint32)
+        self._temp = jnp.zeros((slots,), jnp.float32)
+        self._topk = jnp.zeros((slots,), jnp.int32)
+        self._topp = jnp.ones((slots,), jnp.float32)
+        # the decode step specializes on "has any resident request ever
+        # been non-greedy": the all-greedy program is the historical bare
+        # argmax; admitting the first sampling request rebuilds it once
+        self._greedy_only = self.default_sampling.greedy
+        self._step_fn = jax.jit(self._make_step(self._greedy_only),
+                                donate_argnums=(1, 2, 3, 4, 5, 7))
         # Admission (prefill + pool scatter + slot state reset) is ONE
         # jitted program keyed by the (padded) prompt shape: bucketed
         # families compile at most log2(max_seq)+1 of them; exact-length
         # families (MoE capacity routing, recurrences, bidirectional
         # encoders) compile per unique length — the historical engine's
         # behavior, minus its eager scatter and host argmax.
-        self._admit_fn = jax.jit(self._make_admit(),
-                                 donate_argnums=(1, 2, 3, 4, 5, 6))
+        self._admit_fn = jax.jit(
+            self._make_admit(self._greedy_only),
+            donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+        # prefill compiles accumulated by admit programs replaced on the
+        # greedy->sampling flip (stats() adds the live program's count)
+        self._compiles_base = 0
         if self.paged:
             # swap-in restore; compile key = saved page count (<= n_pt)
-            self._restore_fn = jax.jit(self._make_restore(),
-                                       donate_argnums=(0, 1, 2, 3, 4, 5))
+            self._restore_fn = jax.jit(
+                self._make_restore(),
+                donate_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8, 9))
         # (emit arrays, request snapshot) of the last dispatched step, not
         # yet read back — drained after the NEXT dispatch (overlap)
         self._pending = None
@@ -195,23 +207,31 @@ class Engine:
 
     # -- jitted programs -----------------------------------------------------
 
-    def _make_step(self):
-        cfg, vocab, max_seq = self.cfg, self.cfg.vocab, self.max_seq
-        paged = self.paged
+    def _make_step(self, greedy_only: bool):
+        vocab, max_seq = self.cfg.vocab, self.max_seq
+        cm, paged = self.cm, self.paged
 
         def body(params, cache, token, pos, active, emitted, max_new,
-                 page_table=None):
-            if paged:
-                logits, cache = registry.decode_step_paged(
-                    params, cfg, cache, page_table, token, pos)
+                 keys, temp, topk, topp, page_table=None):
+            logits, cache = cm.decode(params, cache, token, pos, page_table)
+            if greedy_only:
+                # all-greedy specialization: no resident request can draw,
+                # so the step is the historical bare argmax — the sampling
+                # machinery (sorts, softmax, per-slot Gumbel over the
+                # vocab) never enters the hot path. The engine retraces
+                # once with greedy_only=False if a non-greedy request is
+                # ever admitted.
+                nxt = jnp.argmax(logits[:, :vocab], axis=-1) \
+                    .astype(jnp.int32)
             else:
-                logits, cache = registry.decode_step(params, cfg, cache,
-                                                     token, pos)
-            # greedy sampling over the whole pool (masked slots produce a
-            # token too — exactly like the host engine — so families whose
-            # decode couples slots, e.g. MoE capacity routing, see an
-            # identical pool state)
-            nxt = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+                # fused per-slot sampling over the whole pool (masked
+                # slots draw a token too — exactly like the host engine's
+                # unconditional argmax — so families whose decode couples
+                # slots, e.g. MoE capacity routing, see an identical pool
+                # state). temperature==0 rows are the historical argmax;
+                # ``emitted`` is the stream index folded into the key.
+                nxt = sample_tokens(logits[:, :vocab], keys, emitted,
+                                    temp, topk, topp)
             new_pos = pos + 1
             new_emitted = emitted + active.astype(jnp.int32)
             done = active & ((new_emitted >= max_new)
@@ -221,89 +241,150 @@ class Engine:
             # so its buffers never alias state buffers donated into the
             # next dispatch while the host still holds the emit
             emit_tok = jnp.where(active, nxt, -1)
-            return (cache, nxt, new_pos, new_active, new_emitted,
+            return (cache, nxt, new_pos, new_active, new_emitted, keys,
                     (emit_tok, done))
 
         if paged:
             # the page table is a host-owned np array re-sent each dispatch
             # (tiny: slots * pages_per_slot i32) — NOT donated
             def fused(params, cache, token, pos, active, emitted, max_new,
-                      page_table):
+                      keys, temp, topk, topp, page_table):
                 return body(params, cache, token, pos, active, emitted,
-                            max_new, page_table)
+                            max_new, keys, temp, topk, topp, page_table)
         else:
-            def fused(params, cache, token, pos, active, emitted, max_new):
+            def fused(params, cache, token, pos, active, emitted, max_new,
+                      keys, temp, topk, topp):
                 return body(params, cache, token, pos, active, emitted,
-                            max_new)
+                            max_new, keys, temp, topk, topp)
         return fused
 
-    def _make_admit(self):
-        cfg, vocab, max_seq = self.cfg, self.cfg.vocab, self.max_seq
+    def _make_admit(self, greedy_only: bool):
+        cfg, vocab = self.cfg, self.cfg.vocab
         encdec = cfg.family == "encdec"
         pad_ok = self._pad_ok
-        page = self.page_size
+        cm, paged = self.cm, self.paged
 
-        def admit(params, cache, token, pos, active, emitted, max_new,
-                  prompt, length, slot, req_max_new):
+        def body(params, cache, token, pos, active, emitted, max_new,
+                 keys, temp, topk, topp, prompt, length, slot, req_max_new,
+                 req_emitted, seed, s_temp, s_topk, s_topp, pages=None):
+            # req_emitted carries the cumulative emit count across requeues
+            # (recompute preemption: the generated prefix is already in the
+            # prompt and in out_tokens) — it is also the sampling index of
+            # the token this prefill emits, minus one. ``pages`` (paged
+            # only) is the physical destination of each logical prompt
+            # page, trap-padded to the bucket, so the compile key stays
+            # (bucket shape).
             logits, kv = registry.prefill(
                 params, cfg, prompt[None],
                 length=length if pad_ok else None)
-            cache = registry.write_slot(cfg, cache, kv, slot, max_seq)
-            tok0 = jnp.argmax(logits[0, :vocab]).astype(jnp.int32)
+            cache = cm.write(cache, kv, slot=slot, pages=pages)
+            key = jax.random.PRNGKey(seed)
+            if greedy_only:
+                # all-greedy specialization, mirroring _make_step: tok0 is
+                # the historical bare argmax; the key/param buffers are
+                # still written so a later greedy_only=False retrace sees
+                # a consistent carry
+                tok0 = jnp.argmax(logits[0, :vocab]).astype(jnp.int32)
+            else:
+                tok0 = sample_tokens(logits[:, :vocab], key[None],
+                                     (req_emitted - 1)[None], s_temp[None],
+                                     s_topk[None], s_topp[None])[0]
             start = jnp.int32(1) if encdec else length
             token = token.at[slot].set(tok0)
             pos = pos.at[slot].set(start)
             active = active.at[slot].set(True)
-            emitted = emitted.at[slot].set(1)
-            max_new = max_new.at[slot].set(req_max_new)
-            return cache, token, pos, active, emitted, max_new, tok0
-
-        def admit_paged(params, cache, token, pos, active, emitted, max_new,
-                        prompt, length, slot, req_max_new, req_emitted,
-                        pages):
-            # req_emitted carries the cumulative emit count across requeues
-            # (recompute preemption: the generated prefix is already in the
-            # prompt and in out_tokens); pages is the physical destination
-            # of each logical prompt page, trap-padded to the bucket, so
-            # the compile key stays (bucket shape) — identical retrace
-            # behavior to the contiguous engine.
-            logits, kv = registry.prefill(params, cfg, prompt[None],
-                                          length=length)
-            cache = registry.write_pages(cfg, cache, kv, pages, page)
-            tok0 = jnp.argmax(logits[0, :vocab]).astype(jnp.int32)
-            token = token.at[slot].set(tok0)
-            pos = pos.at[slot].set(length)
-            active = active.at[slot].set(True)
             emitted = emitted.at[slot].set(req_emitted)
             max_new = max_new.at[slot].set(req_max_new)
-            return cache, token, pos, active, emitted, max_new, tok0
+            keys = keys.at[slot].set(key)
+            temp = temp.at[slot].set(s_temp)
+            topk = topk.at[slot].set(s_topk)
+            topp = topp.at[slot].set(s_topp)
+            return (cache, token, pos, active, emitted, max_new, keys,
+                    temp, topk, topp, tok0)
 
-        return admit_paged if self.paged else admit
+        if paged:
+            def admit(params, cache, token, pos, active, emitted, max_new,
+                      keys, temp, topk, topp, prompt, length, slot,
+                      req_max_new, req_emitted, seed, s_temp, s_topk,
+                      s_topp, pages):
+                return body(params, cache, token, pos, active, emitted,
+                            max_new, keys, temp, topk, topp, prompt,
+                            length, slot, req_max_new, req_emitted, seed,
+                            s_temp, s_topk, s_topp, pages)
+        else:
+            def admit(params, cache, token, pos, active, emitted, max_new,
+                      keys, temp, topk, topp, prompt, length, slot,
+                      req_max_new, req_emitted, seed, s_temp, s_topk,
+                      s_topp):
+                return body(params, cache, token, pos, active, emitted,
+                            max_new, keys, temp, topk, topp, prompt,
+                            length, slot, req_max_new, req_emitted, seed,
+                            s_temp, s_topk, s_topp)
+        return admit
 
     def _make_restore(self):
         """Jitted swap-in: write a victim's saved pages back into (new)
-        physical pages and restore its device slot state verbatim."""
-        cfg, page = self.cfg, self.page_size
+        physical pages and restore its device slot state verbatim (the
+        sampling key is rebuilt from the seed — it is a pure function of
+        it, so the restored stream replays the same (seed, index) draws)."""
+        cm = self.cm
 
-        def restore(cache, token, pos, active, emitted, max_new,
-                    saved, tok, dpos, demitted, req_max_new, slot, pages):
-            cache = registry.write_pages(cfg, cache, saved, pages, page)
+        def restore(cache, token, pos, active, emitted, max_new, keys,
+                    temp, topk, topp, saved, tok, dpos, demitted,
+                    req_max_new, seed, s_temp, s_topk, s_topp, slot, pages):
+            cache = cm.write(cache, saved, pages=pages)
             token = token.at[slot].set(tok)
             pos = pos.at[slot].set(dpos)
             active = active.at[slot].set(True)
             emitted = emitted.at[slot].set(demitted)
             max_new = max_new.at[slot].set(req_max_new)
-            return cache, token, pos, active, emitted, max_new
+            keys = keys.at[slot].set(jax.random.PRNGKey(seed))
+            temp = temp.at[slot].set(s_temp)
+            topk = topk.at[slot].set(s_topk)
+            topp = topp.at[slot].set(s_topp)
+            return (cache, token, pos, active, emitted, max_new, keys,
+                    temp, topk, topp)
 
         return restore
 
     # -- request lifecycle ---------------------------------------------------
 
+    @property
+    def queue(self):
+        """Back-compat view of the waiting queue (the scheduler; truthy
+        while requests wait, len() = waiting count)."""
+        return self.scheduler
+
+    @property
+    def _pool(self):
+        """Back-compat handle to the paged allocator (None if contiguous)."""
+        return self.cm.pool if self.paged else None
+
     def submit(self, req: Request):
         req.t_submit = time.perf_counter()
         req.arrival = self._arrivals
         self._arrivals += 1
-        self.queue.append(req)
+        self.scheduler.push(req)
+
+    def _sampling_of(self, req: Request) -> SamplingParams:
+        sp = req.sampling if req.sampling is not None \
+            else self.default_sampling
+        if self._greedy_only and not sp.greedy:
+            # first non-greedy admission: swap the all-greedy specialized
+            # step/admit programs for the sampling ones (one retrace per
+            # program + bucket; the carry layout is identical, so
+            # in-flight state is unaffected)
+            self._greedy_only = False
+            self._step_fn = jax.jit(self._make_step(False),
+                                    donate_argnums=(1, 2, 3, 4, 5, 7))
+            try:
+                self._compiles_base += int(self._admit_fn._cache_size())
+            except Exception:
+                pass
+            self._admit_fn = jax.jit(
+                self._make_admit(False),
+                donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+        return sp
 
     def _bucket_len(self, n: int) -> Optional[int]:
         """Padded prompt length, or None for an exact-length prefill."""
@@ -322,19 +403,25 @@ class Engine:
         state byte-for-byte (no prefill, no token emitted). False when the
         pool cannot hold the pages yet (head-of-line waits)."""
         saved, tok, dpos, demitted, n_real = req.swap_state
-        if not self._pool.alloc_n(i, n_real):
+        if not self.cm.restore(i, n_real):
             return False
-        self.queue.popleft()
-        pages = jnp.asarray(np.asarray(self._pool.owned[i], np.int32))
+        self.scheduler.pop()
+        pages = jnp.asarray(self.cm.pages_of(i))
+        sp = self._sampling_of(req)
         with _quiet_donation():
             out = self._restore_fn(
                 self.cache, self._token, self._pos, self._active,
-                self._emitted, self._max_new,
+                self._emitted, self._max_new, self._keys, self._temp,
+                self._topk, self._topp,
                 jax.tree.map(jnp.asarray, saved), jnp.int32(tok),
                 jnp.int32(dpos), jnp.int32(demitted),
-                jnp.int32(req.max_new_tokens), jnp.int32(i), pages)
-        (self.cache, self._token, self._pos, self._active,
-         self._emitted, self._max_new) = out
+                jnp.int32(req.max_new_tokens),
+                jnp.int32(sp.resolve_seed(req.rid)),
+                jnp.float32(sp.temperature), jnp.int32(sp.top_k),
+                jnp.float32(sp.top_p), jnp.int32(i), pages)
+        (self.cache, self._token, self._pos, self._active, self._emitted,
+         self._max_new, self._keys, self._temp, self._topk,
+         self._topp) = out
         req.swap_state = None
         slot.req = req
         slot.dpos = dpos
@@ -344,11 +431,11 @@ class Engine:
 
     def _admit(self):
         for i, slot in enumerate(self.slots):
-            if slot.req is None and self.queue:
-                req = self.queue[0]
+            if slot.req is None and len(self.scheduler):
+                req = self.scheduler.peek()
                 if self.paged and req.swap_state is not None:
                     if not self._readmit_swapped(i, slot, req):
-                        return         # head-of-line: FIFO waits for pages
+                        return     # head-of-line: admission waits for pages
                     continue
                 prompt = np.asarray(req.prompt)
                 if req.out_tokens:
@@ -359,31 +446,33 @@ class Engine:
                         [prompt, np.asarray(req.out_tokens, prompt.dtype)])
                 n = len(prompt)
                 b = self._bucket_len(n)
+                if not self.cm.alloc(i, n):
+                    return         # head-of-line: admission waits for pages
                 pages_arg = None
                 if self.paged:
-                    n_real = -(-n // self.page_size)
-                    if not self._pool.alloc_n(i, n_real):
-                        return     # head-of-line: FIFO waits for pages
-                    plen = b if b is not None else n
-                    b_pages = max(1, -(-plen // self.page_size))
-                    pages = np.zeros((b_pages,), np.int32)   # tail -> trap
-                    pages[:n_real] = self._pool.owned[i]
-                    pages_arg = jnp.asarray(pages)
-                self.queue.popleft()
+                    pages_arg = jnp.asarray(self.cm.prefill_pages(i, n, b))
+                self.scheduler.pop()
                 if b is not None and b > n:
                     pad = np.zeros((b - n,) + prompt.shape[1:], prompt.dtype)
                     prompt = np.concatenate([prompt, pad])
                 self._prefill_shapes.add(prompt.shape)
+                sp = self._sampling_of(req)
                 args = (self.params, self.cache, self._token, self._pos,
                         self._active, self._emitted, self._max_new,
+                        self._keys, self._temp, self._topk, self._topp,
                         jnp.asarray(prompt), jnp.int32(n), jnp.int32(i),
-                        jnp.int32(req.max_new_tokens))
+                        jnp.int32(req.max_new_tokens),
+                        jnp.int32(len(req.out_tokens) + 1),
+                        jnp.int32(sp.resolve_seed(req.rid)),
+                        jnp.float32(sp.temperature), jnp.int32(sp.top_k),
+                        jnp.float32(sp.top_p))
                 if self.paged:
-                    args += (jnp.int32(len(req.out_tokens) + 1), pages_arg)
+                    args += (pages_arg,)
                 with _quiet_donation():
                     out = self._admit_fn(*args)
                 (self.cache, self._token, self._pos, self._active,
-                 self._emitted, self._max_new, tok0) = out
+                 self._emitted, self._max_new, self._keys, self._temp,
+                 self._topk, self._topp, tok0) = out
                 was_requeued = bool(req.out_tokens)
                 req.out_tokens.append(int(tok0))
                 if not req.t_first:
@@ -400,7 +489,7 @@ class Engine:
                     req.done = True
                     self.finished.append(req)
                     self._active = self._active.at[i].set(False)
-                    self._pool.release(i)
+                    self.cm.evict(i)
                     continue
                 slot.req = req
                 slot.dpos = 1 if self.cfg.family == "encdec" else n
@@ -410,63 +499,69 @@ class Engine:
     # -- paged pool growth / preemption --------------------------------------
 
     def _preempt(self, victim: int) -> None:
-        """Evict the occupant of ``victim``: free its pages, deactivate the
-        device slot, and re-queue the request at the FRONT (it keeps its
-        FIFO rank). ``preempt="swap"`` first copies the victim's pages and
-        device state to host for a byte-exact swap-in later;
-        ``"recompute"`` drops them — re-admission folds the generated
-        prefix into the prompt and re-prefills. Caller must have drained
-        the pending emit (the victim's stream must be settled before its
-        pages are reused)."""
+        """Evict the occupant of ``victim``: free its residency, deactivate
+        the device slot, and hand the request back to the scheduler with
+        requeue precedence. The ``PreemptionPolicy`` decides what happens
+        to the KV: ``"swap"`` first copies the victim's pages and device
+        state to host for a byte-exact swap-in later; ``"recompute"``
+        drops them — re-admission folds the generated prefix into the
+        prompt and re-prefills. Caller must have drained the pending emit
+        (the victim's stream must be settled before its pages are
+        reused)."""
         assert self._pending is None
         slot = self.slots[victim]
         req = slot.req
-        if self.preempt_mode == "swap":
-            owned = np.asarray(self._pool.owned[victim], np.int32)
-            saved = registry.read_pages(self.cfg, self.cache,
-                                        jnp.asarray(owned), self.page_size)
+        if self.preemption.mode == "swap":
+            owned = self.cm.pages_of(victim)
+            saved = self.cm.read(self.cache, jnp.asarray(owned))
             req.swap_state = (
                 jax.tree.map(np.asarray, saved),      # host copy (swap out)
                 int(np.asarray(self._token)[victim]),
                 slot.dpos, slot.demitted, len(owned))
-        self._pool.release(victim)
+        self.cm.evict(victim)
         slot.req = None
         slot.dactive = False
         self._active = self._active.at[victim].set(False)
         req.preemptions += 1
         self.preemptions += 1
-        self.queue.appendleft(req)
+        self.scheduler.requeue(req)
 
     def _ensure_pages(self) -> None:
         """Before a dispatch, make every device-active slot's next write
-        position page-backed. On pool exhaustion: settle the in-flight
-        step (finished slots free pages), then preempt the youngest
-        occupant (FCFS — latest admission loses) until the write fits."""
+        position storage-backed. On pool exhaustion: settle the in-flight
+        step (finished slots free pages), then let the preemption policy
+        pick a victim (youngest occupant by default) until the write
+        fits."""
         for i in range(self.n_slots):
             slot = self.slots[i]
             if slot.req is None or not slot.dactive:
                 continue
-            need = slot.dpos // self.page_size     # page written this step
-            while need >= len(self._pool.owned[i]):
-                if self._pool.alloc(i):
+            while not self.cm.backed(i, slot.dpos):
+                if self.cm.grow(i):
                     continue
                 self._drain()
                 if self.slots[i].req is None or not self.slots[i].dactive:
                     break              # the drain settled this very slot
-                if self._pool.num_free:
+                if self.cm.has_free:
                     continue           # the drain freed finished slots
-                occ = [j for j in range(self.n_slots)
+                occ = [(j, self.slots[j].req) for j in range(self.n_slots)
                        if self.slots[j].req is not None]
-                victim = max(occ, key=lambda j: self.slots[j].req.arrival)
+                victim = self.preemption.select_victim(occ)
                 self._preempt(victim)
                 if victim == i:
                     break              # preempted ourselves; requeued
 
     # -- one engine step -----------------------------------------------------
 
+    def has_work(self) -> bool:
+        """True while anything is queued, in flight, or resident."""
+        return bool(len(self.scheduler) or self._pending is not None
+                    or any(s.req is not None for s in self.slots))
+
     def step(self) -> bool:
         if self._pending is not None and \
-                (self.queue and all(s.req is not None for s in self.slots)
+                (len(self.scheduler)
+                 and all(s.req is not None for s in self.slots)
                  or all(s.req is None or not s.dactive
                         for s in self.slots)):
             # Catch up on the pending emit when it can change what to do
@@ -487,13 +582,13 @@ class Engine:
             if not any(s.req is not None for s in self.slots):
                 return False
         args = (self.params, self.cache, self._token, self._pos,
-                self._active, self._emitted, self._max_new)
-        if self.paged:
-            args += (jnp.asarray(self._pool.table),)
+                self._active, self._emitted, self._max_new, self._keys,
+                self._temp, self._topk, self._topp)
+        args += tuple(jnp.asarray(x) for x in self.cm.step_extra())
         with _quiet_donation():
             out = self._step_fn(*args)
         (self.cache, self._token, self._pos, self._active,
-         self._emitted, emit) = out
+         self._emitted, self._keys, emit) = out
         self._steps += 1
         # mirror the device's deterministic stop conditions on the host
         # shadows (the readback of this step is still in flight)
@@ -513,14 +608,14 @@ class Engine:
         return True
 
     def _sample_page_stats(self):
-        in_use = self._pool.pages_in_use
-        self._peak_pages = max(self._peak_pages, in_use)
-        self._util_sum += in_use / self._pool.num_pages
-        alloc_rows = in_use * self.page_size
         used_rows = sum(min(s.dpos, self.max_seq) for s in self.slots
                         if s.req is not None)
-        if alloc_rows:
-            self._frag_sum += 1.0 - min(used_rows, alloc_rows) / alloc_rows
+        self.cm.note_step(used_rows)
+
+    def flush(self):
+        """Settle the in-flight readback (public form of the drain the
+        run loop does at exit — the streaming facade calls this)."""
+        self._drain()
 
     def _drain(self):
         if self._pending is not None:
@@ -540,15 +635,12 @@ class Engine:
                 self.finished.append(req)
                 if self.slots[i].req is req:
                     self.slots[i].req = None
-                    if self.paged:
-                        # later dispatches route this slot's masked writes
-                        # to the trap page; its pages are safe to reuse
-                        self._pool.release(i)
+                    # (paged) later dispatches route this slot's masked
+                    # writes to the trap page; its pages are safe to reuse
+                    self.cm.evict(i)
 
     def run(self, max_steps: int = 10_000):
-        while max_steps > 0 and (self.queue or self._pending is not None
-                                 or any(s.req is not None
-                                        for s in self.slots)):
+        while max_steps > 0 and self.has_work():
             if not self.step():
                 break
             max_steps -= 1
@@ -558,10 +650,12 @@ class Engine:
     # -- introspection -------------------------------------------------------
 
     def stats(self) -> dict:
-        """Decode steps, prefill retrace count, bucket coverage, and (paged)
-        preemption + page-pool utilization/fragmentation."""
+        """Decode steps, prefill retrace count, bucket coverage, scheduler
+        counters, and (paged) preemption + page-pool utilization/
+        fragmentation."""
         try:
-            prefill_compiles = self._admit_fn._cache_size()
+            prefill_compiles = self._compiles_base \
+                + self._admit_fn._cache_size()
         except Exception:
             prefill_compiles = len(self._prefill_shapes)
         out = {
@@ -573,16 +667,8 @@ class Engine:
             "paged": self.paged,
             "preemptions": self.preemptions,
         }
+        out.update(self.scheduler.stats())
         if self.paged:
-            steps = max(self._steps, 1)
-            out.update({
-                "preempt_mode": self.preempt_mode,
-                "page_size": self.page_size,
-                "num_pages": self.num_pages,
-                "peak_pages_in_use": self._peak_pages,
-                # time-averaged pool occupancy and internal fragmentation
-                # (allocated-but-unwritten rows / allocated rows)
-                "page_util_mean": self._util_sum / steps,
-                "page_frag_mean": self._frag_sum / steps,
-            })
+            out["preempt_mode"] = self.preempt_mode
+            out.update(self.cm.stats())
         return out

@@ -83,6 +83,12 @@ class PagePool:
             self._free.append(self.owned[slot].pop())
         self.table[slot, :] = TRAP_PAGE
 
+    def stats(self) -> dict:
+        """Occupancy snapshot (consumed by the paged ``CacheManager``)."""
+        return {"num_pages": self.num_pages,
+                "pages_in_use": self.pages_in_use,
+                "num_free": self.num_free}
+
     # -- invariants ---------------------------------------------------------
 
     def check(self) -> None:

@@ -23,7 +23,14 @@ from repro.serving.engine import Request, _Slot
 
 class ReferenceEngine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 max_seq: int = 512, greedy: bool = True):
+                 max_seq: int = 512, greedy: bool = True, sampling=None):
+        # the oracle is greedy-only BY DESIGN: it pins the pre-refactor
+        # argmax streams. ``sampling`` is accepted for signature parity
+        # with Engine but must describe greedy decoding.
+        if not greedy or (sampling is not None and not sampling.greedy):
+            raise ValueError("ReferenceEngine is the greedy (argmax) "
+                             "oracle; non-greedy streams have no "
+                             "host-driven reference")
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_seq = slots, max_seq
         self.slots = [_Slot() for _ in range(slots)]

@@ -1,0 +1,229 @@
+"""Scheduling layer of the serving API: pluggable admission policies.
+
+The engine consults a ``Scheduler`` for *which waiting request to admit
+next*; everything else (slot residency, preemption mechanics, the fused
+decode step) stays in the engine. The protocol is deliberately small:
+
+    push(req)      new submission
+    requeue(req)   a preempted victim comes back with precedence
+    peek()         the next request to admit (None when empty) — admission
+                   is head-of-line: if the cache manager cannot hold
+                   ``peek()`` yet, the engine waits rather than skipping it
+    pop()          commit the admission of ``peek()``
+    __len__        waiting-request count
+    stats()        {"scheduler", "sched_admitted", "sched_reorders"}
+
+``sched_reorders`` counts pops that were NOT the oldest waiting request —
+0 under FCFS by construction, and an exact, deterministic counter the
+bench-regression gate pins for the priority scenario.
+
+``FCFSScheduler`` reproduces the historical engine's deque byte-for-byte
+(append / appendleft / popleft), so greedy FCFS streams stay bit-identical
+to the committed goldens. ``PriorityScheduler`` and ``SJFScheduler`` sort
+waiting requests (higher ``Request.priority`` first / shortest estimated
+job first), with requeued victims keeping precedence in the same
+most-recent-first order the FCFS deque gives them.
+
+``PreemptionPolicy`` is the companion protocol for *who* gets evicted when
+the paged pool runs dry and *what happens to their KV*: the historical
+youngest-victim swap and recompute modes are its two implementations.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    name: str
+
+    def push(self, req) -> None: ...
+    def requeue(self, req) -> None: ...
+    def peek(self): ...
+    def pop(self): ...
+    def __len__(self) -> int: ...
+    def stats(self) -> dict: ...
+
+
+class _BaseScheduler:
+    name = "base"
+
+    def __init__(self):
+        self.admitted = 0
+        self.reorders = 0
+
+    def _note_pop(self, req, waiting) -> None:
+        self.admitted += 1
+        oldest = min(r.arrival for r in waiting)
+        if req.arrival != oldest:
+            self.reorders += 1
+
+    def stats(self) -> dict:
+        return {"scheduler": self.name, "sched_admitted": self.admitted,
+                "sched_reorders": self.reorders}
+
+
+class FCFSScheduler(_BaseScheduler):
+    """First-come-first-served — the historical deque, bit-for-bit:
+    submissions append, preempted victims go back to the FRONT (they keep
+    their rank), admission pops the head."""
+    name = "fcfs"
+
+    def __init__(self):
+        super().__init__()
+        self._q: deque = deque()
+
+    def push(self, req) -> None:
+        self._q.append(req)
+
+    def requeue(self, req) -> None:
+        self._q.appendleft(req)
+
+    def peek(self):
+        return self._q[0] if self._q else None
+
+    def pop(self):
+        self._note_pop(self._q[0], self._q)
+        return self._q.popleft()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class _SortedScheduler(_BaseScheduler):
+    """Sorts waiting requests by ``_key``; ties broken by arrival.
+    Requeued (preempted) requests sort before everything else, most recent
+    requeue first — the same precedence the FCFS deque's ``appendleft``
+    gives them, so swap-state victims re-enter promptly under any policy."""
+
+    def __init__(self):
+        super().__init__()
+        self._q: list = []
+        self._requeues = 0
+
+    def _key(self, req) -> tuple:
+        raise NotImplementedError
+
+    def _full_key(self, req) -> tuple:
+        seq = getattr(req, "_requeue_seq", None)
+        if seq is not None:
+            return (0, -seq)
+        return (1,) + self._key(req) + (req.arrival,)
+
+    def push(self, req) -> None:
+        self._q.append(req)
+
+    def requeue(self, req) -> None:
+        self._requeues += 1
+        req._requeue_seq = self._requeues
+        self._q.append(req)
+
+    def peek(self):
+        return min(self._q, key=self._full_key) if self._q else None
+
+    def pop(self):
+        req = min(self._q, key=self._full_key)
+        self._note_pop(req, self._q)
+        # remove by IDENTITY: list.remove would compare Request dataclasses
+        # field-by-field, and `ndarray == ndarray` on the prompt raises
+        # (ambiguous truth value) as soon as two waiting requests share rid
+        for i, r in enumerate(self._q):
+            if r is req:
+                del self._q[i]
+                break
+        if getattr(req, "_requeue_seq", None) is not None:
+            req._requeue_seq = None
+        return req
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class PriorityScheduler(_SortedScheduler):
+    """Highest ``Request.priority`` first; FCFS within a priority level."""
+    name = "priority"
+
+    def _key(self, req) -> tuple:
+        return (-getattr(req, "priority", 0),)
+
+
+class SJFScheduler(_SortedScheduler):
+    """Shortest estimated job first: prompt length + requested new tokens
+    (a static proxy for total pool residency); FCFS on ties."""
+    name = "sjf"
+
+    def _key(self, req) -> tuple:
+        return (len(req.prompt) + req.max_new_tokens,)
+
+
+SCHEDULERS = {"fcfs": FCFSScheduler, "priority": PriorityScheduler,
+              "sjf": SJFScheduler}
+
+
+def make_scheduler(policy) -> Scheduler:
+    """Resolve a policy name or pass an instance through."""
+    if policy is None:
+        return FCFSScheduler()
+    if isinstance(policy, str):
+        try:
+            return SCHEDULERS[policy]()
+        except KeyError:
+            raise ValueError(f"unknown scheduler {policy!r}; "
+                             f"have {sorted(SCHEDULERS)}") from None
+    return policy
+
+
+# ---------------------------------------------------------------------------
+# preemption policy
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class PreemptionPolicy(Protocol):
+    """Who loses their pages when the pool runs dry, and what eviction
+    does with their KV. ``mode`` is consumed by the engine's eviction
+    mechanics: "swap" saves the victim's pages + device state to host for
+    a byte-exact restore; "recompute" drops them and re-prefills
+    prompt + generated prefix on re-admission (greedy-stable only)."""
+    mode: str
+
+    def select_victim(self, occupants) -> int: ...
+
+
+class _YoungestVictim:
+    """FCFS-fair eviction: the most recently admitted occupant loses.
+    ``occupants`` is a list of ``(slot_index, request)`` pairs."""
+
+    def select_victim(self, occupants) -> int:
+        return max(occupants, key=lambda t: t[1].arrival)[0]
+
+
+class SwapPreemption(_YoungestVictim):
+    """Youngest victim, pages + device state swapped to host and restored
+    byte-for-byte on re-admission — streams provably unchanged."""
+    mode = "swap"
+
+
+class RecomputePreemption(_YoungestVictim):
+    """Youngest victim, pages dropped; re-admission re-prefills prompt +
+    generated prefix (vLLM's recompute mode — cheaper in host memory, but
+    only greedy-stable: a near-tied argmax can flip many steps later)."""
+    mode = "recompute"
+
+
+PREEMPTION_POLICIES = {"swap": SwapPreemption, "recompute":
+                       RecomputePreemption}
+
+
+def make_preemption(policy) -> PreemptionPolicy:
+    """Resolve a policy name or pass an instance through."""
+    if policy is None:
+        return SwapPreemption()
+    if isinstance(policy, str):
+        try:
+            return PREEMPTION_POLICIES[policy]()
+        except KeyError:
+            raise ValueError(f"unknown preemption policy {policy!r}; "
+                             f"have {sorted(PREEMPTION_POLICIES)}") from None
+    return policy

@@ -13,6 +13,7 @@ import pytest
 
 from repro import configs
 from repro.models import registry
+from repro.serving.cache_manager import CacheConfig
 from repro.serving.engine import Engine, Request
 from repro.serving.reference import ReferenceEngine
 
@@ -118,8 +119,11 @@ def test_paged_matches_contiguous_pool():
     cfg, params = _setup("qwen2-0.5b")
     lens = [3, 9, 5, 12, 7]
     paged, eng = _streams(Engine, cfg, params, lens, max_new=4)
-    contig, ceng = _streams(lambda p, c, **kw: Engine(p, c, paged=False, **kw),
-                            cfg, params, lens, max_new=4)
+    contig, ceng = _streams(
+        lambda p, c, **kw: Engine(p, c,
+                                  cache_manager=CacheConfig(paged=False),
+                                  **kw),
+        cfg, params, lens, max_new=4)
     assert eng.stats()["paged"] and not ceng.stats()["paged"]
     assert paged == contig
     assert eng.stats()["preemptions"] == 0
@@ -133,7 +137,9 @@ def test_oversubscribed_bit_identical_with_preemption():
     lens = [30, 25, 28, 21, 26]          # ~130 prompt rows + generation
     kw = dict(max_new=20, slots=3, max_seq=64)
     new, eng = _streams(
-        lambda p, c, **k: Engine(p, c, page_size=16, num_pages=6, **k),
+        lambda p, c, **k: Engine(
+            p, c, cache_manager=CacheConfig(page_size=16, num_pages=6),
+            **k),
         cfg, params, lens, **dict(kw))
     ref, _ = _streams(ReferenceEngine, cfg, params, lens, **dict(kw))
     st = eng.stats()
@@ -152,7 +158,9 @@ def test_forced_preemption_requeue_roundtrip():
     lens = [20, 17, 23]
     kw = dict(max_new=30, slots=3, max_seq=64)
     new, eng = _streams(
-        lambda p, c, **k: Engine(p, c, page_size=16, num_pages=4, **k),
+        lambda p, c, **k: Engine(
+            p, c, cache_manager=CacheConfig(page_size=16, num_pages=4),
+            **k),
         cfg, params, lens, **dict(kw))
     ref, _ = _streams(ReferenceEngine, cfg, params, lens, **dict(kw))
     assert new == ref
@@ -172,8 +180,9 @@ def test_recompute_preemption_completes():
     lens = [22, 19, 26]
     kw = dict(max_new=25, slots=3, max_seq=64)
     new, eng = _streams(
-        lambda p, c, **k: Engine(p, c, page_size=16, num_pages=4,
-                                 preempt="recompute", **k),
+        lambda p, c, **k: Engine(
+            p, c, cache_manager=CacheConfig(page_size=16, num_pages=4),
+            preemption="recompute", **k),
         cfg, params, lens, **dict(kw))
     ref, _ = _streams(ReferenceEngine, cfg, params, lens, **dict(kw))
     assert eng.stats()["preemptions"] >= 1
@@ -190,11 +199,13 @@ def test_paged_gating_per_family():
     eng = Engine(params_moe, cfg_moe, slots=2, max_seq=64)
     assert not eng.stats()["paged"]
     with pytest.raises(ValueError):
-        Engine(params_moe, cfg_moe, slots=2, max_seq=64, paged=True)
+        Engine(params_moe, cfg_moe, slots=2, max_seq=64,
+               cache_manager=CacheConfig(paged=True))
     cfg_q, params_q = _setup("qwen2-0.5b")
     assert registry.paged_ok(cfg_q)
     with pytest.raises(ValueError):   # page size must tile max_seq
-        Engine(params_q, cfg_q, slots=2, max_seq=64, page_size=24)
+        Engine(params_q, cfg_q, slots=2, max_seq=64,
+               cache_manager=CacheConfig(page_size=24))
 
 
 @pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))

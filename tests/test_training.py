@@ -13,8 +13,7 @@ from repro.data.pipeline import Pipeline, _batch_np
 from repro.models import registry
 from repro.training import optimizer as opt
 from repro.training.checkpoint import Checkpointer
-from repro.training.fault_tolerance import (FailureInjector,
-                                            StragglerWatchdog,
+from repro.training.fault_tolerance import (StragglerWatchdog,
                                             run_with_restarts)
 from repro.training.train_step import TrainConfig, init_state, make_train_step
 
