@@ -39,8 +39,11 @@ BASELINE = os.path.join(HERE, "baseline.json")
 # a fixed seed; a change means the engine's behavior changed, not the
 # host). ``sched_reorders`` pins scheduler-policy behavior: 0 under FCFS
 # by construction, an exact reorder count for the priority_mix scenario.
+# ``prefix_hit_tokens`` / ``cow_copies`` pin the radix prefix cache: an
+# exact hit count for the shared_prefix mix, zero everywhere else (random
+# prompts must never alias a 16-token page).
 EXACT_SERVING = ("steps", "prefill_compiles", "preemptions",
-                 "sched_reorders")
+                 "sched_reorders", "prefix_hit_tokens", "cow_copies")
 
 
 def _serving_key(row: dict) -> str:
@@ -57,8 +60,10 @@ def extract(bench: dict) -> dict:
             "correct": bool(k["correct"]),
         }
     for row in bench.get("serving", []):
-        if row.get("engine", "device") != "device":
-            continue            # reference rows exist only under --compare
+        # gate the device engine and the shared_prefix no-cache twin
+        # (reference rows exist only under --compare and stay ungated)
+        if row.get("engine", "device") not in ("device", "device-nocache"):
+            continue
         slim = {"tok_per_s": round(row["tok_per_s"], 2)}
         for key in EXACT_SERVING:
             if row.get(key) is not None:

@@ -23,7 +23,14 @@ priorities, admitted by the PriorityScheduler — the row's exact
 ``sched_reorders`` counter pins the policy's behavior in the regression
 gate; per-request streams still match the FCFS reference for
 slot-independent families, which is what ``--check`` asserts on the dense
-arch). Wall times on this host are CPU numbers — a functional serving
+arch), and ``shared_prefix`` (16 requests whose prompts are staircase
+cuts of one 256-token base — ~90% of prompt tokens are radix-tree hits
+once warm, including one exact-duplicate prompt that forces a
+copy-on-write; rows report ``prefix_hit_tokens`` / ``prefix_hit_rate`` /
+``cow_copies``, a ``device-nocache`` twin row runs the same engine with
+the tree disabled, ``streams_match_nocache`` asserts bit-identical
+streams and ``warm_ttft_ms`` compares first-token latency over the warm
+requests). Wall times on this host are CPU numbers — a functional serving
 benchmark, not a TPU projection.
 
 Device rows are driven through the ``LLMEngine`` facade
@@ -80,11 +87,14 @@ def _mix_lengths(mix: str, rng) -> list[int]:
         # ragged batch with rid-derived priorities (see build_requests):
         # the PriorityScheduler must reorder admission deterministically
         return [int(n) for n in rng.integers(6, 33, 12)]
+    if mix == "shared_prefix":
+        # lengths only (frames fallback); token prompts share content too
+        return _SHARED_PREFIX_LENS
     raise KeyError(f"unknown mix {mix!r}; have {sorted(MIXES)}")
 
 
 MIXES = ("uniform_short", "long_tail", "ragged_burst", "oversubscribed",
-         "priority_mix")
+         "priority_mix", "shared_prefix")
 
 # paged-pool geometry for the oversubscribed mix: 4 slots x 128 max_seq
 # would fully subscribe 32 pages of 16; 12 pages force admission queueing
@@ -93,8 +103,33 @@ MIXES = ("uniform_short", "long_tail", "ragged_burst", "oversubscribed",
 PAGE_SIZE, OVERSUB_PAGES = 16, 12
 MIX_ENGINE_KW = {"oversubscribed": {"page_size": PAGE_SIZE,
                                     "num_pages": OVERSUB_PAGES},
-                 "priority_mix": {"scheduler": "priority"}}
+                 "priority_mix": {"scheduler": "priority"},
+                 # long staircase prompts over one 256-token base need the
+                 # bigger window (240-token prompt + 8 generated < 256)
+                 "shared_prefix": {"max_seq": 256}}
 MIX_MAX_NEW = {"oversubscribed": 24}
+
+# shared_prefix recipe: r0-r11 are a page-aligned staircase over one base
+# (64, 80, ..., 240 — every suffix after the cached prefix is exactly one
+# 16-row page), r12 duplicates r5 exactly (the forced-CoW shape: full-
+# prompt match, last page copied before re-prefill), r13-r15 cut the base
+# at a page boundary and append a ragged uncached tail. ~90% of all
+# prompt tokens are radix-tree hits once the tree is warm.
+_SHARED_PREFIX_STAIRS = [64 + 16 * i for i in range(12)]
+_SHARED_PREFIX_TAILS = ((208, 5), (96, 9), (176, 3))
+_SHARED_PREFIX_LENS = (_SHARED_PREFIX_STAIRS + [144]
+                       + [cut + extra for cut, extra
+                          in _SHARED_PREFIX_TAILS])
+
+
+def _shared_prefix_prompts(cfg, rng) -> list[np.ndarray]:
+    base = rng.integers(0, cfg.vocab, (256,), dtype=np.int32)
+    prompts = [base[:n].copy() for n in _SHARED_PREFIX_STAIRS]
+    prompts.append(base[:144].copy())           # exact duplicate of r5
+    for cut, extra in _SHARED_PREFIX_TAILS:
+        tail = rng.integers(0, cfg.vocab, (extra,), dtype=np.int32)
+        prompts.append(np.concatenate([base[:cut], tail]))
+    return prompts
 
 
 def build_requests(cfg, mix: str, *, seed: int = SEED,
@@ -104,6 +139,9 @@ def build_requests(cfg, mix: str, *, seed: int = SEED,
     if max_new is None:
         max_new = MIX_MAX_NEW.get(mix, MAX_NEW)
     rng = np.random.default_rng(seed)
+    if mix == "shared_prefix" and cfg.frontend != "frames":
+        return [Request(rid=rid, prompt=p, max_new_tokens=max_new)
+                for rid, p in enumerate(_shared_prefix_prompts(cfg, rng))]
     reqs = []
     for rid, n in enumerate(_mix_lengths(mix, rng)):
         if cfg.frontend == "frames":
@@ -134,6 +172,14 @@ def _metrics_row(wall, toks, ttfts, stats, streams) -> dict:
     if "scheduler" in stats:
         row["scheduler"] = stats["scheduler"]
         row["sched_reorders"] = stats["sched_reorders"]
+    # always present (zero when caching is off/unsupported) so the
+    # regression gate can compare them uniformly across engines
+    row["prefix_cache"] = stats.get("prefix_cache", False)
+    row["prefix_hit_tokens"] = stats.get("prefix_hit_tokens", 0)
+    row["cow_copies"] = stats.get("cow_copies", 0)
+    if row["prefix_cache"]:
+        row["prefix_hit_rate"] = round(stats.get("prefix_hit_rate", 0.0), 4)
+        row["tree_evictions"] = stats.get("tree_evictions", 0)
     if stats.get("paged"):
         row.update({
             "page_size": stats["page_size"],
@@ -172,8 +218,13 @@ def run_llm(llm, requests) -> dict:
     wall = time.perf_counter() - t0
     toks = sum(len(o.tokens) for o in outs)
     ttfts = [o.ttft_s for o in outs if o.ttft_s is not None]
-    return _metrics_row(wall, toks, ttfts, llm.stats(),
-                        {o.rid: list(o.tokens) for o in outs})
+    row = _metrics_row(wall, toks, ttfts, llm.stats(),
+                       {o.rid: list(o.tokens) for o in outs})
+    # per-request detail for the warm-TTFT comparison; popped by
+    # bench_arch before rows leave the process
+    row["_ttfts"] = {o.rid: o.ttft_s for o in outs}
+    row["_hits"] = {o.rid: o.prefix_hit_tokens for o in outs}
+    return row
 
 
 def reference_rows(arch: str, mixes=MIXES, *, seed: int = SEED) -> list[dict]:
@@ -190,9 +241,10 @@ def reference_rows(arch: str, mixes=MIXES, *, seed: int = SEED) -> list[dict]:
     rows = []
     for mix in mixes:
         reqs = build_requests(cfg, mix, seed=seed)
+        max_seq = MIX_ENGINE_KW.get(mix, {}).get("max_seq", MAX_SEQ)
         row = {"arch": arch, "mix": mix, "engine": "reference",
                **run_engine(ReferenceEngine(params, cfg, slots=SLOTS,
-                                            max_seq=MAX_SEQ), reqs)}
+                                            max_seq=max_seq), reqs)}
         row["prefill_compiles"] = len({len(r.prompt) for r in reqs})
         rows.append(row)
     return rows
@@ -236,10 +288,33 @@ def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
     params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
     rows = []
     for mix in mixes:
-        llm = LLMEngine(params, cfg, slots=SLOTS, max_seq=MAX_SEQ,
-                        **MIX_ENGINE_KW.get(mix, {}))
-        rows.append({"arch": arch, "mix": mix, "engine": "device",
-                     **run_llm(llm, build_requests(cfg, mix, seed=seed))})
+        kw = dict(slots=SLOTS, max_seq=MAX_SEQ)
+        kw.update(MIX_ENGINE_KW.get(mix, {}))
+        llm = LLMEngine(params, cfg, **kw)
+        reqs = build_requests(cfg, mix, seed=seed)
+        row = {"arch": arch, "mix": mix, "engine": "device",
+               **run_llm(llm, reqs)}
+        rows.append(row)
+        if mix == "shared_prefix":
+            # the prefix cache's own oracle: the identical engine with the
+            # radix tree disabled — streams must match bit-for-bit, and
+            # warm requests (those with tree hits) show the TTFT win
+            llm0 = LLMEngine(params, cfg, prefix_cache=False, **kw)
+            row0 = {"arch": arch, "mix": mix, "engine": "device-nocache",
+                    **run_llm(llm0, reqs)}
+            row["streams_match_nocache"] = \
+                row["streams"] == row0["streams"]
+            warm = sorted(r for r, h in row["_hits"].items() if h > 0)
+            if warm:
+                for r_ in (row, row0):
+                    ts = [r_["_ttfts"][w] for w in warm
+                          if r_["_ttfts"][w] is not None]
+                    r_["warm_ttft_ms"] = float(np.mean(ts)) * 1e3 \
+                        if ts else None
+            rows.append(row0)
+    for row in rows:
+        row.pop("_ttfts", None)
+        row.pop("_hits", None)
     if compare or check:
         refs = {r["mix"]: r for r in
                 _reference_rows_subprocess(arch, mixes, seed)}
@@ -250,6 +325,8 @@ def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
         slot_independent = bool(getattr(registry.module_for(cfg),
                                         "PAGED_OK", False))
         for row in list(rows):
+            if row["engine"] != "device":
+                continue
             ref = refs[row["mix"]]
             row["speedup_vs_reference"] = (ref["wall_s"] / row["wall_s"]
                                            if row["wall_s"] else None)
@@ -324,11 +401,20 @@ def print_rows(rows):
         if r.get("scheduler") and r["scheduler"] != "fcfs":
             sched = (f",sched={r['scheduler']},"
                      f"reorders={r['sched_reorders']}")
+        pfx = ""
+        if r.get("prefix_cache"):
+            pfx = (f",hit_rate={r['prefix_hit_rate']:.2f},"
+                   f"hit_tokens={r['prefix_hit_tokens']},"
+                   f"cow={r['cow_copies']}")
+        if r.get("warm_ttft_ms") is not None:
+            pfx += f",warm_ttft_ms={r['warm_ttft_ms']:.0f}"
+        if r.get("streams_match_nocache") is not None:
+            pfx += f",match_nocache={r['streams_match_nocache']}"
         print(f"serving/{r['arch']}/{r['mix']}/{r['engine']},{us:.0f},"
               f"tok_s={r['tok_per_s']:.1f},ttft_ms={ttft},"
               f"steps={r['steps']},"
-              f"prefill_compiles={r['prefill_compiles']}{sched}{paged}"
-              f"{extra}")
+              f"prefill_compiles={r['prefill_compiles']}{sched}{pfx}"
+              f"{paged}{extra}")
 
 
 def bench(archs=DEFAULT_ARCHS, mixes=MIXES, *, compare: bool = False,
@@ -354,6 +440,10 @@ def main(argv=None) -> int:
                     help="fail unless device streams match the recorded "
                          "goldens in benchmarks/golden/")
     ap.add_argument("--record-golden", action="store_true")
+    ap.add_argument("--skip-reference", action="store_true",
+                    help="skip the host-reference subprocess (fast local "
+                         "runs; disables --compare rows and --check's "
+                         "stream comparison, golden checks still run)")
     ap.add_argument("--json", action="store_true",
                     help=f"write rows (sans streams) to {SERVE_JSON}")
     ap.add_argument("--reference-only", action="store_true",
@@ -369,8 +459,10 @@ def main(argv=None) -> int:
         with open(args.out, "w") as f:
             json.dump(rows, f)
         return 0
+    compare = (args.compare or args.check) and not args.skip_reference
     rows = bench(tuple(args.archs or DEFAULT_ARCHS), mixes,
-                 compare=args.compare or args.check, check=args.check)
+                 compare=compare, check=args.check and not
+                 args.skip_reference)
     print_rows(rows)
     rc = 0
     if args.check:

@@ -31,14 +31,14 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
         slots: int = 3, max_new: int = 8, max_seq: int = 128,
         prompt_len: int = 16, seed: int = 0, verbose: bool = True,
         page_size: int = 16, num_pages: int | None = None,
-        scheduler: str = "fcfs", temperature: float = 0.0,
-        top_k: int = 0, top_p: float = 1.0,
+        prefix_cache: bool = True, scheduler: str = "fcfs",
+        temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
         sampling_seed: int | None = None):
     cfg = configs.smoke(arch) if smoke else configs.get(arch)
     params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
     llm = LLMEngine(params, cfg, slots=slots, max_seq=max_seq,
                     scheduler=scheduler, page_size=page_size,
-                    num_pages=num_pages)
+                    num_pages=num_pages, prefix_cache=prefix_cache)
     sp = SamplingParams(temperature=temperature, top_k=top_k, top_p=top_p,
                         seed=sampling_seed)
     rng = np.random.default_rng(seed)
@@ -80,6 +80,13 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
                   f"peak {s['peak_pages_in_use']}/{s['num_pages']} pages, "
                   f"mean util {s['page_util_mean']:.0%}, "
                   f"frag {s['page_frag_mean']:.0%}")
+        if s.get("prefix_cache"):
+            print(f"prefix cache: {s['prefix_hit_tokens']}/"
+                  f"{s['prefix_query_tokens']} prompt tokens served from "
+                  f"the radix tree (hit rate {s['prefix_hit_rate']:.0%}), "
+                  f"{s['cow_copies']} CoW copies, "
+                  f"{s['tree_pages']} cached pages, "
+                  f"{s['tree_evictions']} tree evictions")
     return outs
 
 
@@ -96,6 +103,9 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="paged-pool size; below slots*max_seq/page_size "
                          "oversubscribes (admission queues + preemption)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix prefix caching (on by default "
+                         "for paged token-prompt families)")
     ap.add_argument("--scheduler", default="fcfs",
                     choices=["fcfs", "priority", "sjf"],
                     help="admission policy (requests carry rid%%3 "
@@ -113,7 +123,8 @@ def main():
     run(arch=args.arch, requests=args.requests, slots=args.slots,
         max_new=args.max_new, max_seq=args.max_seq,
         prompt_len=args.prompt_len, page_size=args.page_size,
-        num_pages=args.num_pages, scheduler=args.scheduler,
+        num_pages=args.num_pages, prefix_cache=not args.no_prefix_cache,
+        scheduler=args.scheduler,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         sampling_seed=args.sampling_seed)
 

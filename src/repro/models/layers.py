@@ -16,7 +16,6 @@ and the TPU-target Pallas path (splash-style skipping) is costed there.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
@@ -452,6 +451,37 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, chunk=512):
     q, k, v = shard_attention(q, k, v)
     o = flash_attention(q, k, v, True, cfg.window, chunk, False)
     return out_proj(p, o, x.dtype), (k, v)
+
+
+def prefix_attention(q, k_new, v_new, k_prefix, v_prefix, prefix_len):
+    """Suffix-prefill attention over a two-segment KV: cached prefix rows
+    followed by the suffix's own keys/values.
+
+    q, k_new, v_new: [B, S, H*, dh] — the suffix (right-padded to its
+    bucket); k_prefix, v_prefix: [B, P, Hkv, dh] — prefix rows gathered
+    from the paged pool, of which only the first ``prefix_len`` (traced
+    i32) are valid; the tail is trap-page garbage and must be masked, which
+    is why ``chunked_attention``'s single ``kv_len`` cut-off cannot express
+    this layout. Causality is over *absolute* positions: suffix query i
+    sits at ``prefix_len + i`` and sees the valid prefix plus suffix keys
+    ``<= i``.
+    """
+    b, s, hq, dh = q.shape
+    hkv = k_new.shape[2]
+    g = hq // hkv
+    p_rows = k_prefix.shape[1]
+    k = jnp.concatenate([k_prefix, k_new], 1).astype(jnp.float32)
+    v = jnp.concatenate([v_prefix, v_new], 1).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, s, hkv, g, dh) * dh ** -0.5
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k)
+    kpos = jnp.arange(p_rows + s)
+    qpos = jnp.asarray(prefix_len, jnp.int32) + jnp.arange(s)
+    valid = (kpos < prefix_len) | (kpos >= p_rows)
+    pos_of_k = jnp.where(kpos < p_rows, kpos, prefix_len + (kpos - p_rows))
+    mask = valid[None, :] & (pos_of_k[None, :] <= qpos[:, None])
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", jax.nn.softmax(sc, -1), v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, dh).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

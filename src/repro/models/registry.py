@@ -212,6 +212,41 @@ def write_pages(cfg: ModelConfig, pool, new, pages, page_size: int):
     return jax.tree.unflatten(treedef, out)
 
 
+def prefix_cache_ok(cfg: ModelConfig) -> bool:
+    """True when this arch can reuse radix-cached prefix pages: it must
+    serve paged (``paged_ok``), take token-id prompts (frame frontends
+    have no hashable token chunks), and implement ``prefill_suffix``."""
+    return (paged_ok(cfg) and cfg.frontend != "frames"
+            and hasattr(module_for(cfg), "prefill_suffix"))
+
+
+def prefill_suffix(params, cfg: ModelConfig, tokens, prefix, *,
+                   prefix_len, length=None):
+    """Prefill only a prompt's suffix against gathered prefix KV rows —
+    the radix-prefix-hit admission path. See the family module."""
+    return module_for(cfg).prefill_suffix(params, cfg, tokens, prefix,
+                                          prefix_len=prefix_len,
+                                          length=length)
+
+
+def copy_pages(cfg: ModelConfig, pool, src, dst, page_size: int):
+    """Device-side whole-page duplication (copy-on-write): copy physical
+    page ``src`` into ``dst`` on every cache leaf. Axes-driven like
+    ``write_pages`` — the pool's pages axis sits where the contiguous
+    spec's batch axis was."""
+    _, axes = cache_spec(cfg, 1, page_size)
+    is_ax = lambda x: isinstance(x, tuple)
+    pool_leaves, treedef = jax.tree.flatten(pool)
+    ax_leaves = jax.tree.leaves(axes, is_leaf=is_ax)
+    out = []
+    for p, ax in zip(pool_leaves, ax_leaves):
+        ba = ax.index("batch")
+        pm = jnp.moveaxis(p, ba, 0)
+        pm = pm.at[dst].set(pm[src])
+        out.append(jnp.moveaxis(pm, 0, ba))
+    return jax.tree.unflatten(treedef, out)
+
+
 # --------------------------------------------------------------------------
 # input specs (ShapeDtypeStructs; the dry-run's only "data")
 # --------------------------------------------------------------------------

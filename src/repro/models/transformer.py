@@ -212,6 +212,55 @@ def prefill(params, cfg: ModelConfig, tokens, *, chunk: int = 512,
     return L.unembed(normed[:, 0], params["lm_head"]), cache
 
 
+def prefill_suffix(params, cfg: ModelConfig, tokens, prefix, *,
+                   prefix_len, length=None):
+    """Prefill only the *suffix* of a prompt whose first ``prefix_len``
+    positions are already cached (radix prefix hit).
+
+    ``tokens``: [1, S] suffix ids, right-padded to the suffix bucket.
+    ``prefix``: {"k","v"} of [L, 1, P, Hkv, dh] — prefix rows gathered
+    from the paged pool (``registry.read_pages``); only the first
+    ``prefix_len`` rows are valid, the tail is trap garbage that
+    ``prefix_attention`` masks. ``prefix_len`` and ``length`` (true suffix
+    length) are traced i32 scalars, so the compile key is the pair of
+    bucket shapes only. Returns (logits at suffix position ``length - 1``,
+    suffix KV {"k","v"} [L, 1, S, Hkv, dh]) for the page scatter."""
+    if cfg.window:
+        raise ValueError("rolling-window caches do not serve from the "
+                         "paged pool, so they never suffix-prefill")
+    b, s = tokens.shape
+    hidden = L.embed_tokens(params["embed"], tokens).astype(cfg.jnp_dtype)
+    residual = jnp.zeros_like(hidden)
+    positions = jnp.asarray(prefix_len, jnp.int32) + \
+        jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, xs):
+        p_layer, pk, pv = xs
+        hidden, residual = carry
+        hidden = L.shard_batch(hidden)
+        residual = L.shard_batch(residual)
+        normed, residual = L.add_rms_norm(hidden, residual,
+                                          p_layer["attn_norm"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(p_layer["attn"], normed, cfg)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        q, k, v = L.shard_attention(q, k, v)
+        attn = L.prefix_attention(q, k, v, pk, pv, prefix_len)
+        attn_out = L.out_proj(p_layer["attn"], attn, normed.dtype)
+        normed, residual = L.add_rms_norm(attn_out, residual,
+                                          p_layer["mlp_norm"], cfg.norm_eps)
+        hidden = L.mlp_block(p_layer["mlp"], normed)
+        return (hidden, residual), (k, v)
+
+    (hidden, residual), (ks, vs) = lax.scan(
+        body, (hidden, residual),
+        (params["layers"], prefix["k"], prefix["v"]))
+    h_last, r_last = _last_position(hidden, residual, length)
+    normed, _ = L.add_rms_norm(h_last, r_last,
+                               params["final_norm"], cfg.norm_eps)
+    return L.unembed(normed[:, 0], params["lm_head"]), {"k": ks, "v": vs}
+
+
 def _last_position(hidden, residual, length):
     """[B,1,D] slices of the final prompt position (``length-1`` when the
     prompt is right-padded, else the literal last position)."""

@@ -50,6 +50,8 @@ class RequestOutput:
     tokens: list
     ttft_s: Optional[float] = None      # submit -> first token
     preemptions: int = 0
+    prefix_hit_tokens: int = 0          # prompt tokens served from the
+                                        # radix prefix cache
 
 
 SamplingLike = Union[SamplingParams, Sequence[SamplingParams], None]
@@ -68,14 +70,15 @@ class LLMEngine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  max_seq: int = 512, scheduler="fcfs", preemption="swap",
                  paged: Optional[bool] = None, page_size: int = 16,
-                 num_pages: Optional[int] = None,
+                 num_pages: Optional[int] = None, prefix_cache: bool = True,
                  sampling: Optional[SamplingParams] = None):
         self.cfg = cfg
         self.engine = Engine(
             params, cfg, slots=slots, max_seq=max_seq, sampling=sampling,
             scheduler=scheduler, preemption=preemption,
             cache_manager=CacheConfig(paged=paged, page_size=page_size,
-                                      num_pages=num_pages))
+                                      num_pages=num_pages,
+                                      prefix_cache=prefix_cache))
         self._next_rid = 0
 
     # -- submission ----------------------------------------------------------
@@ -159,7 +162,8 @@ class LLMEngine:
             outs.append(RequestOutput(
                 rid=req.rid, prompt_len=len(req.prompt),
                 tokens=list(req.out_tokens), ttft_s=ttft,
-                preemptions=req.preemptions))
+                preemptions=req.preemptions,
+                prefix_hit_tokens=req.prefix_hit_tokens))
         self._release(reqs)
         return outs
 

@@ -85,6 +85,8 @@ class Request:
     t_first: float = 0.0                # wall time of the first token (TTFT)
     preemptions: int = 0                # paged engine: times evicted+requeued
     arrival: int = -1                   # submission rank, stamped by submit
+    prefix_hit_tokens: int = 0          # prompt tokens served from the radix
+                                        # cache instead of prefill
     # swap-preemption payload: (host KV pages, token, pos, emitted) — the
     # victim's exact device state, restored verbatim on re-admission
     swap_state: Optional[tuple] = dataclasses.field(default=None, repr=False)
@@ -199,11 +201,25 @@ class Engine:
             self._restore_fn = jax.jit(
                 self._make_restore(),
                 donate_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8, 9))
+        self._prefix_cache = self.paged and self.cm.prefix_cache \
+            and self._pad_ok
+        if self._prefix_cache:
+            # radix-hit admission: gather prefix pages + prefill the
+            # suffix only; compile key = the suffix bucket shape
+            self._admit_suffix_fn = jax.jit(
+                self._make_admit_suffix(self._greedy_only),
+                donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+            # whole-page device copy for copy-on-write
+            self._cow_fn = jax.jit(
+                lambda cache, src, dst: registry.copy_pages(
+                    self.cfg, cache, src, dst, self.page_size),
+                donate_argnums=(0,))
         # (emit arrays, request snapshot) of the last dispatched step, not
         # yet read back — drained after the NEXT dispatch (overlap)
         self._pending = None
         self._steps = 0
         self._prefill_shapes: set[tuple] = set()
+        self._suffix_shapes: set[int] = set()
 
     # -- jitted programs -----------------------------------------------------
 
@@ -322,6 +338,47 @@ class Engine:
                             s_temp, s_topk, s_topp)
         return admit
 
+    def _make_admit_suffix(self, greedy_only: bool):
+        """Radix-hit admission: the prompt's first ``prefix_len`` positions
+        are already resident (tree pages mapped read-only into the slot's
+        table), so only the suffix is prefilled — against prefix rows
+        gathered from the pool. ``prefix_pages`` is trap-padded to the
+        full ``pages_per_slot`` and ``prefix_len``/``s_len`` are traced,
+        so the compile key is the suffix bucket shape alone."""
+        cfg, vocab = self.cfg, self.cfg.vocab
+        cm = self.cm
+
+        def admit(params, cache, token, pos, active, emitted, max_new,
+                  keys, temp, topk, topp, suffix, s_len, prefix_len,
+                  prefix_pages, suffix_pages, slot, req_max_new,
+                  req_emitted, seed, s_temp, s_topk, s_topp):
+            prefix = cm.read(cache, prefix_pages)
+            logits, kv = registry.prefill_suffix(
+                params, cfg, suffix[None], prefix,
+                prefix_len=prefix_len, length=s_len)
+            cache = cm.write(cache, kv, pages=suffix_pages)
+            key = jax.random.PRNGKey(seed)
+            if greedy_only:
+                tok0 = jnp.argmax(logits[0, :vocab]).astype(jnp.int32)
+            else:
+                tok0 = sample_tokens(logits[:, :vocab], key[None],
+                                     (req_emitted - 1)[None], s_temp[None],
+                                     s_topk[None], s_topp[None])[0]
+            start = prefix_len + s_len        # true prompt length
+            token = token.at[slot].set(tok0)
+            pos = pos.at[slot].set(start)
+            active = active.at[slot].set(True)
+            emitted = emitted.at[slot].set(req_emitted)
+            max_new = max_new.at[slot].set(req_max_new)
+            keys = keys.at[slot].set(key)
+            temp = temp.at[slot].set(s_temp)
+            topk = topk.at[slot].set(s_topk)
+            topp = topp.at[slot].set(s_topp)
+            return (cache, token, pos, active, emitted, max_new, keys,
+                    temp, topk, topp, tok0)
+
+        return admit
+
     def _make_restore(self):
         """Jitted swap-in: write a victim's saved pages back into (new)
         physical pages and restore its device slot state verbatim (the
@@ -384,6 +441,15 @@ class Engine:
             self._admit_fn = jax.jit(
                 self._make_admit(False),
                 donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+            if self._prefix_cache:
+                try:
+                    self._compiles_base += \
+                        int(self._admit_suffix_fn._cache_size())
+                except Exception:
+                    pass
+                self._admit_suffix_fn = jax.jit(
+                    self._make_admit_suffix(False),
+                    donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
         return sp
 
     def _bucket_len(self, n: int) -> Optional[int]:
@@ -397,6 +463,13 @@ class Engine:
         while b < n:
             b *= 2
         return min(b, cap)
+
+    def _suffix_bucket(self, s_len: int) -> int:
+        """Suffix-prefill bucket: pow2 like ``_bucket_len`` but floored at
+        one page, so tiny suffixes (the common radix-hit case) all share
+        one compiled program instead of one per pow2 below page_size."""
+        b = self._bucket_len(s_len)
+        return max(self.page_size, b if b is not None else s_len)
 
     def _readmit_swapped(self, i: int, slot: _Slot, req: Request) -> bool:
         """Swap-in re-admission: restore the victim's saved pages + device
@@ -446,33 +519,52 @@ class Engine:
                         [prompt, np.asarray(req.out_tokens, prompt.dtype)])
                 n = len(prompt)
                 b = self._bucket_len(n)
-                if not self.cm.alloc(i, n):
-                    return         # head-of-line: admission waits for pages
-                pages_arg = None
-                if self.paged:
-                    pages_arg = jnp.asarray(self.cm.prefill_pages(i, n, b))
+                if self._prefix_cache:
+                    # radix-aware hold: maps the longest cached prefix
+                    # read-only + reserves private pages for the rest
+                    plan = self.cm.admit_prompt(i, prompt)
+                    if plan is None:
+                        return     # head-of-line: admission waits for pages
+                else:
+                    plan = None
+                    if not self.cm.alloc(i, n):
+                        return     # head-of-line: admission waits for pages
                 self.scheduler.pop()
-                if b is not None and b > n:
-                    pad = np.zeros((b - n,) + prompt.shape[1:], prompt.dtype)
-                    prompt = np.concatenate([prompt, pad])
-                self._prefill_shapes.add(prompt.shape)
                 sp = self._sampling_of(req)
-                args = (self.params, self.cache, self._token, self._pos,
-                        self._active, self._emitted, self._max_new,
-                        self._keys, self._temp, self._topk, self._topp,
-                        jnp.asarray(prompt), jnp.int32(n), jnp.int32(i),
-                        jnp.int32(req.max_new_tokens),
-                        jnp.int32(len(req.out_tokens) + 1),
-                        jnp.int32(sp.resolve_seed(req.rid)),
-                        jnp.float32(sp.temperature), jnp.int32(sp.top_k),
-                        jnp.float32(sp.top_p))
+                if plan is not None and plan["suffix_start"] > 0:
+                    tok0 = self._dispatch_suffix(i, req, prompt, n, plan, sp)
+                    req.prefix_hit_tokens += plan["suffix_start"]
+                else:
+                    pages_arg = None
+                    if self.paged:
+                        pages_arg = jnp.asarray(
+                            self.cm.prefill_pages(i, n, b))
+                    if b is not None and b > n:
+                        pad = np.zeros((b - n,) + prompt.shape[1:],
+                                       prompt.dtype)
+                        prompt = np.concatenate([prompt, pad])
+                    self._prefill_shapes.add(prompt.shape)
+                    args = (self.params, self.cache, self._token, self._pos,
+                            self._active, self._emitted, self._max_new,
+                            self._keys, self._temp, self._topk, self._topp,
+                            jnp.asarray(prompt), jnp.int32(n), jnp.int32(i),
+                            jnp.int32(req.max_new_tokens),
+                            jnp.int32(len(req.out_tokens) + 1),
+                            jnp.int32(sp.resolve_seed(req.rid)),
+                            jnp.float32(sp.temperature),
+                            jnp.int32(sp.top_k), jnp.float32(sp.top_p))
+                    if self.paged:
+                        args += (pages_arg,)
+                    with _quiet_donation():
+                        out = self._admit_fn(*args)
+                    (self.cache, self._token, self._pos, self._active,
+                     self._emitted, self._max_new, self._keys, self._temp,
+                     self._topk, self._topp, tok0) = out
                 if self.paged:
-                    args += (pages_arg,)
-                with _quiet_donation():
-                    out = self._admit_fn(*args)
-                (self.cache, self._token, self._pos, self._active,
-                 self._emitted, self._max_new, self._keys, self._temp,
-                 self._topk, self._topp, tok0) = out
+                    # the prompt's full pages are now written (prefill
+                    # covers 0..n-1) — publish them to the radix tree so
+                    # later admissions can share them (no-op when disabled)
+                    self.cm.insert_prompt(i, prompt[:n], n)
                 was_requeued = bool(req.out_tokens)
                 req.out_tokens.append(int(tok0))
                 if not req.t_first:
@@ -495,6 +587,44 @@ class Engine:
                 slot.dpos = 1 if self.cfg.family == "encdec" else n
                 slot.demitted = len(req.out_tokens)
                 slot.dactive = True
+
+    def _dispatch_suffix(self, i: int, req: Request, prompt: np.ndarray,
+                         n: int, plan: dict, sp) -> int:
+        """Dispatch a radix-hit admission: optional copy-on-write page
+        duplication, then the suffix-only prefill program."""
+        ss = plan["suffix_start"]
+        s_len = n - ss
+        sb = self._suffix_bucket(s_len)
+        suffix = prompt[ss:]
+        if sb > s_len:
+            pad = np.zeros((sb - s_len,) + suffix.shape[1:], suffix.dtype)
+            suffix = np.concatenate([suffix, pad])
+        if plan["cow"] is not None:
+            # a full-prompt match re-prefills its final page into a fresh
+            # private copy; duplicate the shared page's bytes first so the
+            # copy also holds rows the suffix program won't rewrite
+            src, dst = plan["cow"]
+            with _quiet_donation():
+                self.cache = self._cow_fn(self.cache, jnp.int32(src),
+                                          jnp.int32(dst))
+        self._suffix_shapes.add(sb)
+        args = (self.params, self.cache, self._token, self._pos,
+                self._active, self._emitted, self._max_new,
+                self._keys, self._temp, self._topk, self._topp,
+                jnp.asarray(suffix), jnp.int32(s_len), jnp.int32(ss),
+                jnp.asarray(self.cm.prefix_page_vec(i, ss)),
+                jnp.asarray(self.cm.suffix_pages(i, ss, n, sb)),
+                jnp.int32(i), jnp.int32(req.max_new_tokens),
+                jnp.int32(len(req.out_tokens) + 1),
+                jnp.int32(sp.resolve_seed(req.rid)),
+                jnp.float32(sp.temperature), jnp.int32(sp.top_k),
+                jnp.float32(sp.top_p))
+        with _quiet_donation():
+            out = self._admit_suffix_fn(*args)
+        (self.cache, self._token, self._pos, self._active,
+         self._emitted, self._max_new, self._keys, self._temp,
+         self._topk, self._topp, tok0) = out
+        return tok0
 
     # -- paged pool growth / preemption --------------------------------------
 
@@ -608,9 +738,9 @@ class Engine:
         return True
 
     def _sample_page_stats(self):
-        used_rows = sum(min(s.dpos, self.max_seq) for s in self.slots
-                        if s.req is not None)
-        self.cm.note_step(used_rows)
+        rows = {i: min(s.dpos, self.max_seq)
+                for i, s in enumerate(self.slots) if s.req is not None}
+        self.cm.note_step(rows)
 
     def flush(self):
         """Settle the in-flight readback (public form of the drain the
@@ -634,6 +764,18 @@ class Engine:
                 req.done = True
                 self.finished.append(req)
                 if self.slots[i].req is req:
+                    if self._prefix_cache:
+                        # publish the full sequence's pages before freeing
+                        # them: coverage stops one short of the end — the
+                        # final emitted token's KV row was never written
+                        # (and the overlapped extra dispatch may write
+                        # there), so only strictly-earlier full pages are
+                        # valid
+                        prompt = np.asarray(req.prompt)
+                        toks = np.concatenate(
+                            [prompt,
+                             np.asarray(req.out_tokens, prompt.dtype)])
+                        self.cm.insert_prompt(i, toks, len(toks) - 1)
                     self.slots[i].req = None
                     # (paged) later dispatches route this slot's masked
                     # writes to the trap page; its pages are safe to reuse
@@ -656,12 +798,16 @@ class Engine:
         try:
             prefill_compiles = self._compiles_base \
                 + self._admit_fn._cache_size()
+            if self._prefix_cache:
+                prefill_compiles += self._admit_suffix_fn._cache_size()
         except Exception:
-            prefill_compiles = len(self._prefill_shapes)
+            prefill_compiles = len(self._prefill_shapes) \
+                + len(self._suffix_shapes)
         out = {
             "steps": self._steps,
             "prefill_compiles": int(prefill_compiles),
             "prefill_shapes": sorted(s[0] for s in self._prefill_shapes),
+            "suffix_shapes": sorted(self._suffix_shapes),
             "pad_prefill": self._pad_ok,
             "slots": self.n_slots,
             "paged": self.paged,

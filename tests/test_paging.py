@@ -65,3 +65,57 @@ def test_pool_too_small_rejected():
     # engine's head-of-line admission; the allocator refuses to exist
     with pytest.raises(ValueError):
         PagePool(num_pages=3, page_size=16, slots=2, pages_per_slot=4)
+
+
+def test_shared_mapping_refcounts():
+    pool = PagePool(num_pages=6, page_size=8, slots=3, pages_per_slot=4)
+    assert pool.alloc_n(0, 2)
+    prefix = list(pool.owned[0])
+    for p in prefix:                          # the tree pins the prefix
+        pool.retain(p)
+    pool.map_shared(1, prefix)                # second slot maps it read-only
+    pool.check()
+    assert pool.refcnt[prefix[0]] == 3        # slot0 + slot1 + tree
+    assert pool.shared[1] == set(prefix) and pool.shared[0] == set()
+    pool.release(0)                           # original owner leaves …
+    pool.check()
+    assert pool.refcnt[prefix[0]] == 2        # … pages stay live
+    pool.release(1)
+    pool.check()
+    assert pool.refcnt[prefix[0]] == 1 and pool.num_free == 4
+    for p in prefix:                          # tree eviction frees them
+        pool.drop(p)
+    pool.check()
+    assert pool.num_free == 6
+
+
+def test_cow_repoints_only_the_writer():
+    pool = PagePool(num_pages=6, page_size=8, slots=2, pages_per_slot=3)
+    assert pool.alloc_n(0, 2)
+    prefix = list(pool.owned[0])
+    for p in prefix:
+        pool.retain(p)
+    pool.map_shared(1, prefix)
+    src, dst = pool.cow(1, 1)                 # slot1 writes into page idx 1
+    pool.check()
+    assert src == prefix[1] and dst not in prefix
+    assert pool.owned[1] == [prefix[0], dst]
+    assert pool.table[1][1] == dst
+    assert pool.owned[0] == prefix, "other mapper untouched"
+    assert dst not in pool.shared[1], "the copy is private"
+    assert pool.refcnt[src] == 2 and pool.refcnt[dst] == 1
+    with pytest.raises(AssertionError):
+        pool.cow(1, 1)                        # already private
+
+
+def test_map_shared_capacity_and_dead_pages():
+    pool = PagePool(num_pages=8, page_size=8, slots=2, pages_per_slot=2)
+    assert pool.alloc_n(0, 2)
+    pages = list(pool.owned[0])
+    pool.map_shared(1, pages[:1])
+    with pytest.raises(RuntimeError):         # would exceed pages_per_slot
+        pool.map_shared(1, pages)
+    pool.release(0)
+    pool.release(1)
+    with pytest.raises(AssertionError):       # pages are dead now
+        pool.map_shared(1, pages[:1])

@@ -1,0 +1,169 @@
+"""Radix prefix-cache tests: bit-identical streams (prefix-cached ==
+no-prefix-cache paged == host-driven reference) for greedy and seeded
+non-greedy sampling, forced copy-on-write on a full-prompt match, forced
+preemption while pages are shared, LRU tree eviction under pool pressure,
+and the prefill-compile collapse that is the feature's whole point."""
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import registry
+from repro.serving.cache_manager import CacheConfig
+from repro.serving.engine import Engine, Request
+from repro.serving.reference import ReferenceEngine
+from repro.serving.sampling import SamplingParams
+
+_STATE = {}
+
+
+def _setup():
+    if not _STATE:
+        cfg = configs.smoke("qwen2-0.5b")
+        _STATE["cfg"] = cfg
+        _STATE["params"] = registry.init(cfg, jax.random.PRNGKey(0))[0]
+    return _STATE["cfg"], _STATE["params"]
+
+
+def _shared_prompts(cfg, seed=0):
+    """A staircase over one 48-token base: page-aligned extensions, one
+    diverging tail, and one exact duplicate (the forced-CoW shape)."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, cfg.vocab, (48,), dtype=np.int32)
+    tail = rng.integers(0, cfg.vocab, (5,), dtype=np.int32)
+    return [base[:32], base[:48], np.concatenate([base[:32], tail]),
+            base[:48].copy()]
+
+
+def _run(engine_cls, cfg, params, prompts, *, max_new=6, slots=3,
+         max_seq=64, sampling=None, **kw):
+    eng = engine_cls(params, cfg, slots=slots, max_seq=max_seq, **kw)
+    for rid, p in enumerate(prompts):
+        sp = sampling[rid] if sampling is not None else None
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=max_new,
+                           sampling=sp))
+    eng.run()
+    return {r.rid: list(r.out_tokens) for r in eng.finished}, eng
+
+
+def test_greedy_streams_bit_identical():
+    """Prefix-cached == no-prefix-cache paged == host reference, while the
+    cache actually hits (the equality must not be vacuous)."""
+    cfg, params = _setup()
+    prompts = _shared_prompts(cfg)
+    hit, eng = _run(Engine, cfg, params, prompts)
+    cold, _ = _run(Engine, cfg, params, prompts,
+                   cache_manager=CacheConfig(prefix_cache=False))
+    ref, _ = _run(ReferenceEngine, cfg, params, prompts)
+    assert hit == cold == ref
+    s = eng.stats()
+    assert s["prefix_cache"] and s["prefix_hit_tokens"] > 0
+    eng._pool.check()
+
+
+def test_seeded_sampling_streams_bit_identical():
+    """Seeded non-greedy draws are a pure function of (seed, index), so
+    prefix-cached and cold-cache engines must emit identical streams.
+    (The host reference is greedy-only, so the cold paged engine is the
+    oracle here.)"""
+    cfg, params = _setup()
+    prompts = _shared_prompts(cfg)
+    sampling = [SamplingParams(temperature=0.8, top_k=20, top_p=0.95,
+                               seed=11 * rid + 3)
+                for rid in range(len(prompts))]
+    hit, eng = _run(Engine, cfg, params, prompts, sampling=sampling)
+    cold, _ = _run(Engine, cfg, params, prompts, sampling=sampling,
+                   cache_manager=CacheConfig(prefix_cache=False))
+    assert hit == cold
+    assert eng.stats()["prefix_hit_tokens"] > 0
+    assert all(len(v) == 6 for v in hit.values())
+
+
+def test_forced_cow_divergence():
+    """Two requests share a full-prompt prefix then diverge: the duplicate
+    admission must copy-on-write its final page (the next decode write
+    would otherwise land in a tree-shared page) and still match the
+    cold-cache streams token for token."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, cfg.vocab, (32,), dtype=np.int32)
+    tail = rng.integers(0, cfg.vocab, (7,), dtype=np.int32)
+    prompts = [base, base.copy(), np.concatenate([base[:16], tail])]
+    hit, eng = _run(Engine, cfg, params, prompts, max_new=8)
+    cold, _ = _run(Engine, cfg, params, prompts, max_new=8,
+                   cache_manager=CacheConfig(prefix_cache=False))
+    ref, _ = _run(ReferenceEngine, cfg, params, prompts, max_new=8)
+    assert hit == cold == ref
+    s = eng.stats()
+    assert s["cow_copies"] >= 1, "full-prompt match must trigger CoW"
+    # the duplicate decoded its own continuation, not a shared buffer:
+    # identical prompts share streams, the diverging one does not
+    assert hit[0] == hit[1] and hit[2] != hit[0]
+    eng._pool.check()
+
+
+def test_preemption_while_shared():
+    """Oversubscribed pool + shared prefixes: swap preemption of a victim
+    whose table maps tree-shared pages must leave the tree intact and
+    keep streams bit-identical to the never-evicting reference."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    base = rng.integers(0, cfg.vocab, (32,), dtype=np.int32)
+    t1 = rng.integers(0, cfg.vocab, (3,), dtype=np.int32)
+    prompts = [base, base.copy(), np.concatenate([base, t1])]
+    kw = dict(max_new=20, slots=3, max_seq=64)
+    hit, eng = _run(Engine, cfg, params, prompts,
+                    cache_manager=CacheConfig(page_size=16, num_pages=5),
+                    **kw)
+    ref, _ = _run(ReferenceEngine, cfg, params, prompts, **kw)
+    assert hit == ref
+    assert eng.stats()["preemptions"] >= 1
+    eng._pool.check()
+    assert all(not pages for pages in eng._pool.owned)
+
+
+def test_tree_eviction_under_pressure():
+    """Distinct prompts through a minimal pool: every admission must
+    reclaim the previous request's tree-cached pages (they are unpinned
+    once the request finishes), and the tree never blocks completion."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, (24,), dtype=np.int32)
+               for _ in range(4)]
+    out, eng = _run(Engine, cfg, params, prompts, max_new=4, slots=2,
+                    cache_manager=CacheConfig(page_size=16, num_pages=4))
+    assert sorted(out) == [0, 1, 2, 3]
+    assert all(len(v) == 4 for v in out.values())
+    s = eng.stats()
+    assert s["tree_evictions"] >= 1
+    eng._pool.check()
+
+
+def test_prefill_compile_collapse():
+    """The headline effect: page-aligned staircase prompts reuse cached
+    prefixes, so the warm engine compiles (and runs) fewer prefill
+    programs than the cold one — suffixes collapse into one bucket."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(4)
+    base = rng.integers(0, cfg.vocab, (48,), dtype=np.int32)
+    prompts = [base[:16], base[:32], base[:48]]
+    hit, eng = _run(Engine, cfg, params, prompts)
+    cold, ceng = _run(Engine, cfg, params, prompts,
+                      cache_manager=CacheConfig(prefix_cache=False))
+    assert hit == cold
+    s, cs = eng.stats(), ceng.stats()
+    assert s["prefix_hit_tokens"] == 16 + 32
+    assert s["prefill_compiles"] < cs["prefill_compiles"]
+    assert s["suffix_shapes"] == [16]
+
+
+def test_prefix_cache_gating():
+    """The knob and the per-family gate: disabled managers report no
+    prefix stats; non-paged families never build a tree."""
+    cfg, params = _setup()
+    eng = Engine(params, cfg, slots=2, max_seq=64,
+                 cache_manager=CacheConfig(prefix_cache=False))
+    assert not eng.cm.prefix_cache
+    assert "prefix_hit_tokens" not in eng.stats()
+    cfg_moe = configs.smoke("olmoe-1b-7b")
+    assert not registry.prefix_cache_ok(cfg_moe)

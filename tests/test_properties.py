@@ -8,8 +8,11 @@ import pytest
 pytest.importorskip("hypothesis",
                     reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (  # noqa: E402
+    RuleBasedStateMachine, invariant, precondition, rule)
 
 from repro.kernels import ref
+from repro.serving.paging import PagePool
 from repro.training import compression
 
 jax.config.update("jax_enable_x64", False)
@@ -114,6 +117,104 @@ def test_compression_error_feedback_accumulates():
     # with error feedback, the sum of transmitted grads tracks the true sum
     np.testing.assert_allclose(np.asarray(total),
                                np.full((512,), 8 * 0.004), rtol=0.05)
+
+
+class PagePoolMachine(RuleBasedStateMachine):
+    """Random legal interleavings of the refcounted page-pool API —
+    private allocation, radix-tree retain/drop, read-only sharing across
+    slots, copy-on-write, and slot release — with ``PagePool.check()``
+    (refcount = mappings + tree refs, free ⟺ refcount 0, at most one
+    writable mapper per shared page, no leaks) asserted after every step.
+
+    Mirrors the engine's usage: shared mappings only target live pages,
+    CoW only targets a slot's shared pages and is preceded by ensuring a
+    free page, and ``release`` doubles as admission rollback."""
+
+    SLOTS, NUM_PAGES, PER_SLOT = 3, 12, 6
+
+    def __init__(self):
+        super().__init__()
+        self.pool = PagePool(num_pages=self.NUM_PAGES, page_size=4,
+                             slots=self.SLOTS,
+                             pages_per_slot=self.PER_SLOT)
+        self.tree: list[int] = []       # simulated radix-tree references
+
+    def _live(self):
+        return [p for p in range(1, self.NUM_PAGES + 1)
+                if self.pool.refcnt[p] > 0]
+
+    slots = st.integers(0, SLOTS - 1)
+
+    @rule(slot=slots)
+    def alloc(self, slot):
+        if len(self.pool.owned[slot]) >= self.PER_SLOT:
+            return
+        had_free = self.pool.num_free > 0
+        assert self.pool.alloc(slot) == had_free
+
+    @rule(slot=slots, n=st.integers(1, 5))
+    def alloc_n(self, slot, n):
+        fits = (n <= self.pool.num_free
+                and len(self.pool.owned[slot]) + n <= self.PER_SLOT)
+        before = list(self.pool.owned[slot])
+        assert self.pool.alloc_n(slot, n) == fits
+        got = len(self.pool.owned[slot]) - len(before)
+        assert got == (n if fits else 0), "alloc_n must be all-or-nothing"
+
+    @rule(slot=slots)
+    def release(self, slot):
+        self.pool.release(slot)
+        assert not self.pool.owned[slot] and not self.pool.shared[slot]
+
+    @rule(data=st.data())
+    def tree_retain(self, data):
+        live = self._live()
+        if not live:
+            return
+        page = data.draw(st.sampled_from(live), label="retain page")
+        self.pool.retain(page)
+        self.tree.append(page)
+
+    @precondition(lambda self: self.tree)
+    @rule(data=st.data())
+    def tree_drop(self, data):
+        i = data.draw(st.integers(0, len(self.tree) - 1), label="drop idx")
+        self.pool.drop(self.tree.pop(i))
+
+    @rule(slot=slots, data=st.data())
+    def map_shared(self, slot, data):
+        room = self.PER_SLOT - len(self.pool.owned[slot])
+        cands = [p for p in self._live()
+                 if p not in self.pool.owned[slot]]
+        if not room or not cands:
+            return
+        k = data.draw(st.integers(1, min(room, len(cands))), label="k")
+        pages = data.draw(
+            st.permutations(cands), label="shared pages")[:k]
+        before = {p: self.pool.refcnt[p] for p in pages}
+        self.pool.map_shared(slot, list(pages))
+        assert all(self.pool.refcnt[p] == before[p] + 1 for p in pages)
+
+    @rule(slot=slots, data=st.data())
+    def cow(self, slot, data):
+        shared_idx = [i for i, p in enumerate(self.pool.owned[slot])
+                      if p in self.pool.shared[slot]]
+        if not shared_idx or not self.pool.num_free:
+            return
+        idx = data.draw(st.sampled_from(shared_idx), label="cow idx")
+        src, dst = self.pool.cow(slot, idx)
+        assert dst not in self.pool.shared[slot]
+        assert self.pool.owned[slot][idx] == dst != src
+        assert self.pool.refcnt[dst] == 1
+
+    @invariant()
+    def pool_invariants(self):
+        self.pool.check()
+
+
+PagePoolMachine.TestCase.settings = settings(
+    max_examples=30, stateful_step_count=40, deadline=None)
+TestPagePoolStateMachine = PagePoolMachine.TestCase
 
 
 @settings(max_examples=20, deadline=None)
