@@ -41,9 +41,13 @@ BASELINE = os.path.join(HERE, "baseline.json")
 # by construction, an exact reorder count for the priority_mix scenario.
 # ``prefix_hit_tokens`` / ``cow_copies`` pin the radix prefix cache: an
 # exact hit count for the shared_prefix mix, zero everywhere else (random
-# prompts must never alias a 16-token page).
+# prompts must never alias a 16-token page). The request-lifecycle
+# counters pin the robustness layer: exact abort/reject/fail/recovery
+# counts for the chaos_mix scenario, zero on every undisturbed row.
 EXACT_SERVING = ("steps", "prefill_compiles", "preemptions",
-                 "sched_reorders", "prefix_hit_tokens", "cow_copies")
+                 "sched_reorders", "prefix_hit_tokens", "cow_copies",
+                 "aborted", "rejected", "failed", "deadline_expired",
+                 "recoveries")
 
 
 def _serving_key(row: dict) -> str:
@@ -60,9 +64,11 @@ def extract(bench: dict) -> dict:
             "correct": bool(k["correct"]),
         }
     for row in bench.get("serving", []):
-        # gate the device engine and the shared_prefix no-cache twin
-        # (reference rows exist only under --compare and stay ungated)
-        if row.get("engine", "device") not in ("device", "device-nocache"):
+        # gate the device engine plus the shared_prefix no-cache and
+        # chaos_mix no-chaos twins (reference rows exist only under
+        # --compare and stay ungated)
+        if row.get("engine", "device") not in ("device", "device-nocache",
+                                               "device-nochaos"):
             continue
         slim = {"tok_per_s": round(row["tok_per_s"], 2)}
         for key in EXACT_SERVING:

@@ -30,8 +30,17 @@ copy-on-write; rows report ``prefix_hit_tokens`` / ``prefix_hit_rate`` /
 ``cow_copies``, a ``device-nocache`` twin row runs the same engine with
 the tree disabled, ``streams_match_nocache`` asserts bit-identical
 streams and ``warm_ttft_ms`` compares first-token latency over the warm
-requests). Wall times on this host are CPU numbers — a functional serving
-benchmark, not a TPU projection.
+requests), and ``chaos_mix`` (8 valid requests plus 2 that admission
+must reject, run under a step-indexed ``ChaosInjector`` plan — two
+aborts, one injected device-step fault recovered via quarantine +
+swap-restore, one 5-page pool seizure — against an oversubscribed pool;
+the ``device-nochaos`` twin runs the identical engine without the
+injector, ``survivors_match_nochaos`` asserts surviving streams are
+bit-identical and aborted streams exact prefixes, and the
+``aborted/rejected/failed/recoveries`` lifecycle counters are
+exact-gated; no host-reference row — the reference engine predates fault
+recovery). Wall times on this host are CPU numbers — a functional
+serving benchmark, not a TPU projection.
 
 Device rows are driven through the ``LLMEngine`` facade
 (``generate(prompts, sampling_params)``); the host-driven reference rows
@@ -90,11 +99,20 @@ def _mix_lengths(mix: str, rng) -> list[int]:
     if mix == "shared_prefix":
         # lengths only (frames fallback); token prompts share content too
         return _SHARED_PREFIX_LENS
+    if mix == "chaos_mix":
+        # 8 valid requests plus two that admission must reject up front:
+        # rid 8 is empty, rid 9 cannot fit max_seq (no room to emit)
+        return [int(n) for n in rng.integers(20, 61, 8)] + [0, 200]
     raise KeyError(f"unknown mix {mix!r}; have {sorted(MIXES)}")
 
 
 MIXES = ("uniform_short", "long_tail", "ragged_burst", "oversubscribed",
-         "priority_mix", "shared_prefix")
+         "priority_mix", "shared_prefix", "chaos_mix")
+
+# chaos_mix has no host-reference oracle: the reference engine predates
+# admission validation and fault recovery, so its twin row is instead the
+# SAME device engine run without the injector (see bench_arch)
+MIX_NO_REFERENCE = frozenset({"chaos_mix"})
 
 # paged-pool geometry for the oversubscribed mix: 4 slots x 128 max_seq
 # would fully subscribe 32 pages of 16; 12 pages force admission queueing
@@ -106,8 +124,25 @@ MIX_ENGINE_KW = {"oversubscribed": {"page_size": PAGE_SIZE,
                  "priority_mix": {"scheduler": "priority"},
                  # long staircase prompts over one 256-token base need the
                  # bigger window (240-token prompt + 8 generated < 256)
-                 "shared_prefix": {"max_seq": 256}}
-MIX_MAX_NEW = {"oversubscribed": 24}
+                 "shared_prefix": {"max_seq": 256},
+                 # chaos runs against an oversubscribed pool so the
+                 # injected page seizure actually induces preemption
+                 "chaos_mix": {"page_size": PAGE_SIZE, "num_pages": 18}}
+MIX_MAX_NEW = {"oversubscribed": 24, "chaos_mix": 12}
+
+
+def _chaos_plan():
+    """The deterministic chaos_mix fault plan, all step-indexed (never
+    wall-clock) so the surviving streams and lifecycle counters are
+    golden-stable: one mid-decode abort, one abort while likely still
+    queued, a device-step fault recovered by quarantine + swap-restore,
+    and a 4-step seizure of 5 pool pages (paged engines only; the
+    contiguous fallback marks it fired without effect)."""
+    from repro.reliability import Fault
+    return [Fault("abort", step=2, rid=1),
+            Fault("abort", step=5, rid=5),
+            Fault("device_fault", step=7, slot=1),
+            Fault("pool_exhaustion", step=10, pages=5, steps=4)]
 
 # shared_prefix recipe: r0-r11 are a page-aligned staircase over one base
 # (64, 80, ..., 240 — every suffix after the cached prefix is exactly one
@@ -172,6 +207,11 @@ def _metrics_row(wall, toks, ttfts, stats, streams) -> dict:
     if "scheduler" in stats:
         row["scheduler"] = stats["scheduler"]
         row["sched_reorders"] = stats["sched_reorders"]
+    # request-lifecycle counters (deterministic; exact-gated): nonzero
+    # only under the chaos_mix injector or client aborts/deadlines
+    for key in ("aborted", "rejected", "failed", "deadline_expired",
+                "recoveries"):
+        row[key] = stats.get(key, 0)
     # always present (zero when caching is off/unsupported) so the
     # regression gate can compare them uniformly across engines
     row["prefix_cache"] = stats.get("prefix_cache", False)
@@ -224,6 +264,7 @@ def run_llm(llm, requests) -> dict:
     # bench_arch before rows leave the process
     row["_ttfts"] = {o.rid: o.ttft_s for o in outs}
     row["_hits"] = {o.rid: o.prefix_hit_tokens for o in outs}
+    row["_reasons"] = {o.rid: o.finish_reason for o in outs}
     return row
 
 
@@ -240,6 +281,8 @@ def reference_rows(arch: str, mixes=MIXES, *, seed: int = SEED) -> list[dict]:
     params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
     rows = []
     for mix in mixes:
+        if mix in MIX_NO_REFERENCE:
+            continue
         reqs = build_requests(cfg, mix, seed=seed)
         max_seq = MIX_ENGINE_KW.get(mix, {}).get("max_seq", MAX_SEQ)
         row = {"arch": arch, "mix": mix, "engine": "reference",
@@ -286,15 +329,46 @@ def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
 
     cfg = configs.smoke(arch)
     params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
+    # per-request streams have an oracle (the FCFS reference, or the
+    # chaos row's undisturbed twin) only when decode is slot-independent
+    # (PAGED_OK): aborts/recoveries/reordering change pool composition,
+    # which slot-coupled families (MoE capacity routing) observe
+    slot_independent = bool(getattr(registry.module_for(cfg),
+                                    "PAGED_OK", False))
     rows = []
     for mix in mixes:
         kw = dict(slots=SLOTS, max_seq=MAX_SEQ)
         kw.update(MIX_ENGINE_KW.get(mix, {}))
-        llm = LLMEngine(params, cfg, **kw)
+        chaos = None
+        if mix == "chaos_mix":
+            from repro.serving import ChaosInjector
+            chaos = ChaosInjector(_chaos_plan())
+        llm = LLMEngine(params, cfg, chaos=chaos, **kw)
         reqs = build_requests(cfg, mix, seed=seed)
         row = {"arch": arch, "mix": mix, "engine": "device",
                **run_llm(llm, reqs)}
         rows.append(row)
+        if mix == "chaos_mix":
+            assert chaos.exhausted, "chaos plan failed to fire fully"
+            # the chaos row's oracle: the same engine, same requests, no
+            # injector — surviving streams must be bit-identical and
+            # aborted streams exact prefixes of the undisturbed run
+            llm0 = LLMEngine(params, cfg, **kw)
+            row0 = {"arch": arch, "mix": mix, "engine": "device-nochaos",
+                    **run_llm(llm0, reqs)}
+            if slot_independent:
+                match = True
+                for rid, stream in row["streams"].items():
+                    want = row0["streams"].get(rid, [])
+                    reason = row["_reasons"][rid]
+                    if reason == "done":
+                        match &= stream == want
+                    elif reason == "aborted":
+                        match &= stream == want[:len(stream)]
+                row["survivors_match_nochaos"] = match
+            else:
+                row["survivors_match_nochaos"] = None   # no oracle
+            rows.append(row0)
         if mix == "shared_prefix":
             # the prefix cache's own oracle: the identical engine with the
             # radix tree disabled — streams must match bit-for-bit, and
@@ -315,19 +389,18 @@ def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
     for row in rows:
         row.pop("_ttfts", None)
         row.pop("_hits", None)
+        row.pop("_reasons", None)
     if compare or check:
+        ref_mixes = [m for m in mixes if m not in MIX_NO_REFERENCE]
         refs = {r["mix"]: r for r in
-                _reference_rows_subprocess(arch, mixes, seed)}
-        # per-request streams equal the FCFS reference only when decode is
-        # slot-independent (the PAGED_OK property): under a reordering
-        # scheduler, slot-coupled families (MoE capacity routing) see a
-        # different pool composition, so there is no FCFS oracle for them
-        slot_independent = bool(getattr(registry.module_for(cfg),
-                                        "PAGED_OK", False))
+                _reference_rows_subprocess(arch, ref_mixes, seed)} \
+            if ref_mixes else {}
         for row in list(rows):
             if row["engine"] != "device":
                 continue
-            ref = refs[row["mix"]]
+            ref = refs.get(row["mix"])
+            if ref is None:            # no host oracle (chaos_mix)
+                continue
             row["speedup_vs_reference"] = (ref["wall_s"] / row["wall_s"]
                                            if row["wall_s"] else None)
             sched = MIX_ENGINE_KW.get(row["mix"], {}).get("scheduler",
@@ -410,6 +483,12 @@ def print_rows(rows):
             pfx += f",warm_ttft_ms={r['warm_ttft_ms']:.0f}"
         if r.get("streams_match_nocache") is not None:
             pfx += f",match_nocache={r['streams_match_nocache']}"
+        if any(r.get(k) for k in ("aborted", "rejected", "failed",
+                                  "deadline_expired", "recoveries")):
+            pfx += (f",aborted={r['aborted']},rejected={r['rejected']},"
+                    f"failed={r['failed']},recoveries={r['recoveries']}")
+        if "survivors_match_nochaos" in r:
+            pfx += f",survivors_match={r['survivors_match_nochaos']}"
         print(f"serving/{r['arch']}/{r['mix']}/{r['engine']},{us:.0f},"
               f"tok_s={r['tok_per_s']:.1f},ttft_ms={ttft},"
               f"steps={r['steps']},"

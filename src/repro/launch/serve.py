@@ -12,6 +12,10 @@ CPU-runnable:
     # priority admission over an oversubscribed paged pool:
     PYTHONPATH=src python -m repro.launch.serve --scheduler priority \
         --requests 8 --prompt-len 48 --max-new 24 --num-pages 12
+    # chaos drill: abort rid 1 at step 2, inject a device fault at step
+    # 5 (quarantine + swap-restore recovery), per-request deadline:
+    PYTHONPATH=src python -m repro.launch.serve --requests 6 \
+        --chaos "abort@2:rid=1,device_fault@5:slot=0" --deadline 30
 """
 
 from __future__ import annotations
@@ -24,7 +28,28 @@ import numpy as np
 
 from repro import configs
 from repro.models import registry
-from repro.serving import LLMEngine, SamplingParams
+from repro.serving import ChaosInjector, LLMEngine, SamplingParams
+
+_LIFECYCLE = ("aborted", "rejected", "failed", "deadline_expired",
+              "recoveries")
+
+
+def parse_chaos(spec: str):
+    """Compact fault-plan syntax: ``kind@step[:k=v[;k=v...]],...`` —
+    e.g. ``abort@2:rid=1,device_fault@5:slot=0,
+    pool_exhaustion@8:pages=3;steps=4``."""
+    from repro.reliability import Fault
+    faults = []
+    for part in spec.split(","):
+        head, _, kv = part.strip().partition(":")
+        kind, _, step = head.partition("@")
+        extra = {}
+        for item in filter(None, kv.split(";")):
+            k, _, v = item.partition("=")
+            extra[k.strip()] = float(v) if k.strip() == "seconds" \
+                else int(v)
+        faults.append(Fault(kind=kind.strip(), step=int(step), **extra))
+    return faults
 
 
 def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
@@ -33,12 +58,15 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
         page_size: int = 16, num_pages: int | None = None,
         prefix_cache: bool = True, scheduler: str = "fcfs",
         temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
-        sampling_seed: int | None = None):
+        sampling_seed: int | None = None, deadline: float | None = None,
+        chaos: str | None = None):
     cfg = configs.smoke(arch) if smoke else configs.get(arch)
     params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
+    injector = ChaosInjector(parse_chaos(chaos)) if chaos else None
     llm = LLMEngine(params, cfg, slots=slots, max_seq=max_seq,
                     scheduler=scheduler, page_size=page_size,
-                    num_pages=num_pages, prefix_cache=prefix_cache)
+                    num_pages=num_pages, prefix_cache=prefix_cache,
+                    chaos=injector)
     sp = SamplingParams(temperature=temperature, top_k=top_k, top_p=top_p,
                         seed=sampling_seed)
     rng = np.random.default_rng(seed)
@@ -55,12 +83,16 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
     priorities = [rid % 3 for rid in range(requests)]
     t0 = time.perf_counter()
     outs = llm.generate(prompts, sp, max_new_tokens=max_new,
-                        priorities=priorities)
+                        priorities=priorities, deadlines=deadline)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(o.tokens) for o in outs)
     if verbose:
         for o in outs:
-            print(f"req {o.rid}: prompt[{o.prompt_len}] -> {o.tokens}")
+            tail = "" if o.finish_reason == "done" else (
+                f"  [{o.finish_reason}"
+                + (f": {o.error}]" if o.error else "]"))
+            print(f"req {o.rid}: prompt[{o.prompt_len}] -> {o.tokens}"
+                  f"{tail}")
         s = llm.stats()
         ttfts = [o.ttft_s for o in outs if o.ttft_s is not None]
         mode = "greedy" if sp.greedy else (
@@ -87,6 +119,15 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
                   f"{s['cow_copies']} CoW copies, "
                   f"{s['tree_pages']} cached pages, "
                   f"{s['tree_evictions']} tree evictions")
+        lc = {k: s[k] for k in _LIFECYCLE if s.get(k)}
+        if lc or "chaos_injected" in s:
+            bits = ", ".join(f"{k}={v}" for k, v in lc.items()) \
+                or "every request finished clean"
+            print(f"lifecycle: {bits}")
+            if "chaos_injected" in s:
+                fired = {k: v for k, v in s["chaos_injected"].items() if v}
+                print(f"chaos: injected {fired or 'nothing'}, "
+                      f"{s['chaos_relents']} relents")
     return outs
 
 
@@ -119,6 +160,13 @@ def main():
     ap.add_argument("--seed", type=int, default=None, dest="sampling_seed",
                     help="per-request sampling seed (default: request id, "
                          "so runs are reproducible but requests diverge)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request wall-clock budget in seconds "
+                         "(finish_reason='deadline' on expiry)")
+    ap.add_argument("--chaos", default=None, metavar="PLAN",
+                    help="step-indexed fault plan, e.g. "
+                         "'abort@2:rid=1,device_fault@5:slot=0,"
+                         "pool_exhaustion@8:pages=3;steps=4'")
     args = ap.parse_args()
     run(arch=args.arch, requests=args.requests, slots=args.slots,
         max_new=args.max_new, max_seq=args.max_seq,
@@ -126,7 +174,8 @@ def main():
         num_pages=args.num_pages, prefix_cache=not args.no_prefix_cache,
         scheduler=args.scheduler,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
-        sampling_seed=args.sampling_seed)
+        sampling_seed=args.sampling_seed, deadline=args.deadline,
+        chaos=args.chaos)
 
 
 if __name__ == "__main__":

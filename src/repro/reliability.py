@@ -1,0 +1,66 @@
+"""Shared deterministic fault-injection core.
+
+Both reliability drills in the repo build on this module: the training
+loop's restart drills (``training/fault_tolerance.FailureInjector``) and
+the serving engine's chaos harness (``serving/chaos.ChaosInjector``).
+Keeping the schedule here — one step-indexed, fire-once fault list — is
+what makes chaos runs reproducible: the same ``Fault`` list against the
+same request mix injects the same faults at the same step numbers every
+time, so recovery behaviour can be pinned by golden files.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+
+@dataclasses.dataclass
+class Fault:
+    """One scheduled fault. ``kind`` is interpreted by the consumer (the
+    serving chaos harness understands ``device_fault`` /
+    ``pool_exhaustion`` / ``corrupt_readback`` / ``stall`` / ``abort``;
+    the training injector uses ``raise``); the remaining fields are
+    kind-specific knobs and ignored by kinds that don't use them."""
+
+    kind: str
+    step: int                       # fires when the consumer reaches it
+    slot: Optional[int] = None      # device_fault / corrupt_readback
+    rid: Optional[int] = None       # abort
+    pages: int = 0                  # pool_exhaustion: pages to seize
+    steps: int = 1                  # pool_exhaustion: hold duration
+    seconds: float = 0.0            # stall: sleep length
+
+
+class FaultSchedule:
+    """Step-indexed fault list where each fault fires exactly once.
+
+    ``due(step)`` returns (and permanently marks fired) every not-yet-
+    fired fault scheduled for exactly ``step``. Step numbers that the
+    consumer never reaches simply leave their faults unfired — visible
+    via ``exhausted`` so harnesses can assert their plan fully ran.
+    """
+
+    def __init__(self, faults: Iterable[Fault]):
+        self.faults = list(faults)
+        self._fired = [False] * len(self.faults)
+
+    def due(self, step: int,
+            kinds: Optional[Sequence[str]] = None) -> list[Fault]:
+        out = []
+        for i, f in enumerate(self.faults):
+            if self._fired[i] or f.step != step:
+                continue
+            if kinds is not None and f.kind not in kinds:
+                continue
+            self._fired[i] = True
+            out.append(f)
+        return out
+
+    @property
+    def fired(self) -> int:
+        return sum(self._fired)
+
+    @property
+    def exhausted(self) -> bool:
+        return all(self._fired)

@@ -12,6 +12,9 @@ Four public layers, vLLM/SGLang-style, over one device-resident core:
   paged KV layouts behind one alloc/write/grow/evict/restore surface.
 * ``LLMEngine`` (``repro.serving.api``) — ``generate()`` / ``stream()``
   facade over the engine.
+* ``ChaosInjector`` (``repro.serving.chaos``) — deterministic fault
+  injection (device faults, pool exhaustion, corrupt readbacks, stalls,
+  aborts) for exercising the request-lifecycle robustness layer.
 
 ``Engine`` is the execution core; ``ReferenceEngine`` is the host-driven
 loop it is proven bit-identical against (greedy FCFS).
@@ -21,6 +24,7 @@ from repro.serving.api import LLMEngine, RequestOutput, TokenEvent
 from repro.serving.cache_manager import (CacheConfig, CacheManager,
                                          ContiguousCacheManager,
                                          PagedCacheManager)
+from repro.serving.chaos import ChaosInjector, InjectedDeviceFault
 from repro.serving.engine import Engine, Request
 from repro.serving.reference import ReferenceEngine
 from repro.serving.sampling import SamplingParams
@@ -31,10 +35,11 @@ from repro.serving.scheduler import (FCFSScheduler, PreemptionPolicy,
                                      make_scheduler)
 
 __all__ = [
-    "CacheConfig", "CacheManager", "ContiguousCacheManager", "Engine",
-    "FCFSScheduler", "LLMEngine", "PagedCacheManager", "PreemptionPolicy",
-    "PriorityScheduler", "RecomputePreemption", "ReferenceEngine",
-    "Request", "RequestOutput", "SJFScheduler", "SamplingParams",
-    "Scheduler", "SwapPreemption", "TokenEvent", "make_preemption",
-    "make_scheduler",
+    "CacheConfig", "CacheManager", "ChaosInjector",
+    "ContiguousCacheManager", "Engine", "FCFSScheduler",
+    "InjectedDeviceFault", "LLMEngine", "PagedCacheManager",
+    "PreemptionPolicy", "PriorityScheduler", "RecomputePreemption",
+    "ReferenceEngine", "Request", "RequestOutput", "SJFScheduler",
+    "SamplingParams", "Scheduler", "SwapPreemption", "TokenEvent",
+    "make_preemption", "make_scheduler",
 ]

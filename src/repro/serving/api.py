@@ -35,16 +35,24 @@ from repro.serving.sampling import SamplingParams
 
 @dataclasses.dataclass(frozen=True)
 class TokenEvent:
-    """One decoded token of one request, in stream order."""
+    """One decoded token of one request, in stream order. A request that
+    ends without a fresh token (aborted, rejected, deadline-expired, or
+    failed with nothing new since the last event) closes its stream with
+    a terminal sentinel event: ``token=-1, done=True`` and the
+    ``finish_reason`` set."""
     rid: int
     token: int
     index: int          # 0-based position within the request's output
-    done: bool          # True on the request's final token
+    done: bool          # True on the request's final event
+    finish_reason: Optional[str] = None  # set on the final event only
 
 
 @dataclasses.dataclass
 class RequestOutput:
-    """Completed request: the full output stream plus serving metadata."""
+    """Completed request: the full output stream plus serving metadata.
+    ``finish_reason`` is the lifecycle outcome (``done | aborted |
+    rejected | failed | deadline``); anything but ``done`` carries the
+    detail in ``error`` and possibly a partial ``tokens`` stream."""
     rid: int
     prompt_len: int
     tokens: list
@@ -52,6 +60,8 @@ class RequestOutput:
     preemptions: int = 0
     prefix_hit_tokens: int = 0          # prompt tokens served from the
                                         # radix prefix cache
+    finish_reason: str = "done"
+    error: Optional[str] = None
 
 
 SamplingLike = Union[SamplingParams, Sequence[SamplingParams], None]
@@ -71,11 +81,11 @@ class LLMEngine:
                  max_seq: int = 512, scheduler="fcfs", preemption="swap",
                  paged: Optional[bool] = None, page_size: int = 16,
                  num_pages: Optional[int] = None, prefix_cache: bool = True,
-                 sampling: Optional[SamplingParams] = None):
+                 sampling: Optional[SamplingParams] = None, chaos=None):
         self.cfg = cfg
         self.engine = Engine(
             params, cfg, slots=slots, max_seq=max_seq, sampling=sampling,
-            scheduler=scheduler, preemption=preemption,
+            scheduler=scheduler, preemption=preemption, chaos=chaos,
             cache_manager=CacheConfig(paged=paged, page_size=page_size,
                                       num_pages=num_pages,
                                       prefix_cache=prefix_cache))
@@ -83,8 +93,15 @@ class LLMEngine:
 
     # -- submission ----------------------------------------------------------
 
+    def abort(self, rid: int) -> bool:
+        """Cancel a live request by rid (``finish_reason="aborted"``);
+        its slot pages / radix retains roll back immediately. True when a
+        live request was found."""
+        return self.engine.abort(rid)
+
     def _submit(self, prompts: Iterable, sampling_params: SamplingLike,
-                max_new_tokens, priorities) -> list[Request]:
+                max_new_tokens, priorities,
+                deadlines=None) -> list[Request]:
         prompts = list(prompts)
         n = len(prompts)
         if isinstance(sampling_params, SamplingParams) \
@@ -101,12 +118,18 @@ class LLMEngine:
         priorities = list(priorities) if priorities is not None else [0] * n
         if len(priorities) != n:
             raise ValueError(f"{len(priorities)} priorities for {n} prompts")
+        if deadlines is None or isinstance(deadlines, (int, float)):
+            deadlines = [deadlines] * n
+        elif len(deadlines) != n:
+            raise ValueError(f"{len(deadlines)} deadlines for {n} prompts")
         reqs = []
-        for prompt, sp, mnt, prio in zip(prompts, sampling_params,
-                                         max_new_tokens, priorities):
+        for prompt, sp, mnt, prio, dl in zip(prompts, sampling_params,
+                                             max_new_tokens, priorities,
+                                             deadlines):
             req = Request(rid=self._next_rid, prompt=np.asarray(prompt),
                           max_new_tokens=int(mnt), sampling=sp,
-                          priority=int(prio))
+                          priority=int(prio),
+                          deadline_s=None if dl is None else float(dl))
             self._next_rid += 1
             self.engine.submit(req)
             reqs.append(req)
@@ -115,27 +138,44 @@ class LLMEngine:
     # -- entry points --------------------------------------------------------
 
     def stream(self, prompts: Iterable, sampling_params: SamplingLike = None,
-               *, max_new_tokens=16, priorities=None,
+               *, max_new_tokens=16, priorities=None, deadlines=None,
                max_steps: int = 10_000) -> Iterator[TokenEvent]:
         """Submit ``prompts`` and yield ``TokenEvent``s as tokens land.
 
         Events of concurrent requests interleave; per request they arrive
         in stream order with ``done=True`` on the last one. The engine's
         one-step readback overlap is preserved — an event can trail its
-        dispatch by one step, never more."""
+        dispatch by one step, never more. Every submitted request's
+        stream terminates: requests that end without a fresh token
+        (aborted / rejected / deadline / failed — including an engine
+        that stops making progress, which fails the leftovers rather
+        than silently dropping them) close with a ``token=-1,
+        done=True`` sentinel carrying the ``finish_reason``."""
         reqs = self._submit(prompts, sampling_params, max_new_tokens,
-                            priorities)
+                            priorities, deadlines)
         emitted = {req.rid: 0 for req in reqs}
+        closed: set = set()
 
         def new_events():
             for req in reqs:
                 while emitted[req.rid] < len(req.out_tokens):
                     i = emitted[req.rid]
                     emitted[req.rid] += 1
+                    last = req.done \
+                        and emitted[req.rid] == len(req.out_tokens)
+                    if last:
+                        closed.add(req.rid)
                     yield TokenEvent(
                         rid=req.rid, token=req.out_tokens[i], index=i,
-                        done=req.done and emitted[req.rid]
-                        == len(req.out_tokens))
+                        done=last,
+                        finish_reason=req.finish_reason if last else None)
+                if req.done and req.rid not in closed:
+                    # terminal sentinel: the request finished without a
+                    # fresh token to carry the done flag
+                    closed.add(req.rid)
+                    yield TokenEvent(
+                        rid=req.rid, token=-1, index=len(req.out_tokens),
+                        done=True, finish_reason=req.finish_reason)
 
         steps = max_steps
         while steps > 0 and self.engine.has_work():
@@ -144,18 +184,21 @@ class LLMEngine:
             steps -= 1
             yield from new_events()
         self.engine.flush()
+        self._fail_leftovers(reqs)
         yield from new_events()
         self._release(reqs)
 
     def generate(self, prompts: Iterable,
                  sampling_params: SamplingLike = None, *,
-                 max_new_tokens=16, priorities=None,
+                 max_new_tokens=16, priorities=None, deadlines=None,
                  max_steps: int = 10_000) -> list[RequestOutput]:
         """Submit ``prompts``, run to completion, return outputs in
-        submission order."""
+        submission order. Per-request failures never raise: each output
+        carries its ``finish_reason`` (and ``error`` detail) instead."""
         reqs = self._submit(prompts, sampling_params, max_new_tokens,
-                            priorities)
+                            priorities, deadlines)
         self.engine.run(max_steps=max_steps)
+        self._fail_leftovers(reqs)
         outs = []
         for req in reqs:
             ttft = (req.t_first - req.t_submit) if req.t_first else None
@@ -163,9 +206,23 @@ class LLMEngine:
                 rid=req.rid, prompt_len=len(req.prompt),
                 tokens=list(req.out_tokens), ttft_s=ttft,
                 preemptions=req.preemptions,
-                prefix_hit_tokens=req.prefix_hit_tokens))
+                prefix_hit_tokens=req.prefix_hit_tokens,
+                finish_reason=req.finish_reason or "done",
+                error=req.error))
         self._release(reqs)
         return outs
+
+    def _fail_leftovers(self, reqs) -> None:
+        """An engine that stopped making progress (``step()`` returned
+        False / ``max_steps`` ran out) may leave requests undone; mark
+        them failed — releasing any residency they still hold — so every
+        stream terminates instead of silently dropping."""
+        for req in reqs:
+            if not req.done:
+                self.engine.cancel_request(
+                    req, "failed",
+                    "engine stopped making progress before this request "
+                    "finished")
 
     def _release(self, reqs) -> None:
         """Drop this wave's completed Requests from the engine's finished

@@ -57,6 +57,18 @@ class CacheManager:
     def restore(self, slot: int, n_pages: int) -> bool:
         raise NotImplementedError
 
+    def infeasible(self, n_tokens: int) -> Optional[str]:
+        """Reason a request of ``n_tokens`` can NEVER be admitted by this
+        manager (admission validation + the engine's deadlock watchdog),
+        or None when it could fit an otherwise-empty pool."""
+        return None
+
+    def clear_tree(self) -> int:
+        """Crash recovery: drop every radix-tree reference (the cached KV
+        died with the device pool). Returns refs dropped; no-op without a
+        prefix cache."""
+        return 0
+
     # -- traced (called inside jit) -----------------------------------------
     def init(self):
         """Fresh device cache tree for this layout."""
@@ -216,6 +228,19 @@ class PagedCacheManager(CacheManager):
 
     def restore(self, slot: int, n_pages: int) -> bool:
         return self._reserve(slot, n_pages)
+
+    def infeasible(self, n_tokens: int) -> Optional[str]:
+        limit = min(self.pool.pages_per_slot, self.num_pages)
+        n = self._n_pages(n_tokens)
+        if n > limit:
+            return (f"prompt needs {n} pages of {self.page_size} but the "
+                    f"pool can hold at most {limit} per request")
+        return None
+
+    def clear_tree(self) -> int:
+        if self.tree is None:
+            return 0
+        return self.tree.clear(self.pool)
 
     # -- radix prefix cache -------------------------------------------------
     def admit_prompt(self, slot: int, tokens) -> Optional[dict]:

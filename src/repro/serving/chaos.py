@@ -1,0 +1,138 @@
+"""Deterministic chaos-injection harness for the serving engine.
+
+Serving is the substrate the Astra agent loop iterates against, so it
+must degrade gracefully rather than crash wholesale — and "gracefully"
+has to be *testable*. ``ChaosInjector`` wires a step-indexed
+``repro.reliability.FaultSchedule`` into the engine's decode loop and
+injects the failure modes the robustness layer claims to survive:
+
+    device_fault      raise ``InjectedDeviceFault`` in place of the fused
+                      step dispatch — exercises quarantine + swap-restore
+                      crash recovery (survivor streams must stay
+                      bit-identical to an undisturbed run)
+    pool_exhaustion   ``PagePool.seize_free`` a page hold for a step
+                      window — exercises preemption under externally
+                      induced pressure; released automatically, or early
+                      via ``relent`` if the hold alone blocks progress
+    corrupt_readback  mangle one slot's token in the batched host
+                      readback — exercises per-request quarantine without
+                      disturbing the other slots
+    stall             sleep inside ``step()`` — exercises deadline expiry
+                      and wall-clock robustness (never used in goldens)
+    abort             call ``engine.abort(rid)`` at a chosen step —
+                      deterministic cancellation for goldens
+
+Everything is keyed on the engine's step counter, never wall-clock, so a
+chaos run against a fixed request mix is exactly reproducible — the
+``chaos_mix`` serve_bench scenario pins survivor streams and
+abort/reject/recovery counters in golden files.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterable
+
+import numpy as np
+
+from repro.reliability import Fault, FaultSchedule
+
+KINDS = frozenset({"device_fault", "pool_exhaustion", "corrupt_readback",
+                   "stall", "abort"})
+
+# token value planted by corrupt_readback: far outside any vocab, and not
+# the -1 "masked" sentinel, so the engine's emit validation must catch it
+CORRUPT_TOKEN = np.iinfo(np.int32).max
+
+
+class InjectedDeviceFault(RuntimeError):
+    """Stands in for a device/runtime failure of the fused step (XLA
+    raises ``XlaRuntimeError``, itself a ``RuntimeError``). ``slot``
+    optionally names the pool slot whose request the recovery path must
+    quarantine; None lets the engine's preemption policy choose."""
+
+    def __init__(self, message: str, slot=None):
+        super().__init__(message)
+        self.slot = slot
+
+
+class ChaosInjector:
+    def __init__(self, faults: Iterable[Fault]):
+        faults = list(faults)
+        for f in faults:
+            if f.kind not in KINDS:
+                raise ValueError(f"unknown chaos fault kind {f.kind!r}; "
+                                 f"have {sorted(KINDS)}")
+        self.schedule = FaultSchedule(faults)
+        self._seized: list[tuple[int, list[int]]] = []  # (release_at, pages)
+        self.injected = {k: 0 for k in sorted(KINDS)}
+        self.relents = 0
+
+    # -- engine hooks -------------------------------------------------------
+
+    def on_step(self, engine, step: int) -> None:
+        """Host-side faults, applied at the top of ``Engine.step()``."""
+        for rel, pages in list(self._seized):
+            if step >= rel:
+                engine.cm.pool.release_seized(pages)
+                self._seized.remove((rel, pages))
+        for f in self.schedule.due(step, kinds=("pool_exhaustion", "stall",
+                                                "abort")):
+            if f.kind == "pool_exhaustion" and engine.paged:
+                pages = engine.cm.pool.seize_free(f.pages)
+                if pages:
+                    self.injected["pool_exhaustion"] += 1
+                    self._seized.append((step + max(1, f.steps), pages))
+            elif f.kind == "stall":
+                self.injected["stall"] += 1
+                time.sleep(f.seconds)
+            elif f.kind == "abort":
+                self.injected["abort"] += 1
+                engine.abort(f.rid)
+
+    def pre_dispatch(self, engine, step: int) -> None:
+        """Raises in place of the fused decode dispatch — the engine's
+        ``except RuntimeError`` recovery path takes it from here. Fired
+        *before* the dispatch, so carry buffers and cache still hold the
+        valid pre-step state (exactly the guarantee a failed XLA launch
+        gives: the donated outputs never materialized)."""
+        for f in self.schedule.due(step, kinds=("device_fault",)):
+            self.injected["device_fault"] += 1
+            raise InjectedDeviceFault(
+                f"injected device fault at step {step}", slot=f.slot)
+
+    def filter_emit(self, step: int, emit):
+        """Corrupt one slot's token in a step's host readback."""
+        due = self.schedule.due(step, kinds=("corrupt_readback",))
+        if not due:
+            return emit
+        tok, done = (np.array(np.asarray(x)) for x in emit)
+        for f in due:
+            self.injected["corrupt_readback"] += 1
+            tok[f.slot if f.slot is not None else 0] = CORRUPT_TOKEN
+        return tok, done
+
+    def relent(self, engine) -> bool:
+        """The engine is quiescent and cannot admit: if a seize hold is
+        live it may be the only thing blocking progress — end every hold
+        early (chaos must induce preemption, not permanent deadlock).
+        True when anything was released."""
+        if not self._seized:
+            return False
+        for _, pages in self._seized:
+            engine.cm.pool.release_seized(pages)
+        self._seized.clear()
+        self.relents += 1
+        return True
+
+    # -- reporting ----------------------------------------------------------
+
+    @property
+    def exhausted(self) -> bool:
+        """Did every scheduled fault fire? (Asserted by chaos tests so a
+        plan that silently never triggers fails loudly.)"""
+        return self.schedule.exhausted
+
+    def stats(self) -> dict:
+        return {"chaos_injected": dict(self.injected),
+                "chaos_relents": self.relents}

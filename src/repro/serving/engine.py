@@ -57,6 +57,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.serving.cache_manager import CacheConfig, make_cache_manager
+from repro.serving.chaos import ChaosInjector
 from repro.serving.sampling import SamplingParams, sample_tokens
 from repro.serving.scheduler import make_preemption, make_scheduler
 
@@ -70,6 +71,21 @@ def _quiet_donation():
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
         yield
+
+
+def _jit_cache_size(fn) -> Optional[int]:
+    """Compiled-program count of a jitted callable via jax's private
+    ``_cache_size`` API; None when the API is absent (jax version drift).
+    Typed narrowly on purpose: the engine's failure-isolation layer
+    swallows per-request faults, never introspection errors — anything
+    other than the known drift modes here must surface."""
+    size = getattr(fn, "_cache_size", None)
+    if size is None:
+        return None
+    try:
+        return int(size())
+    except TypeError:    # drift: no longer a nullary callable / not an int
+        return None
 
 
 @dataclasses.dataclass
@@ -87,6 +103,12 @@ class Request:
     arrival: int = -1                   # submission rank, stamped by submit
     prefix_hit_tokens: int = 0          # prompt tokens served from the radix
                                         # cache instead of prefill
+    deadline_s: Optional[float] = None  # wall-clock budget from t_submit;
+                                        # expiry finishes as "deadline"
+    # lifecycle outcome: None while live, then one of
+    # done | aborted | rejected | failed | deadline
+    finish_reason: Optional[str] = None
+    error: Optional[str] = None         # human-readable failure detail
     # swap-preemption payload: (host KV pages, token, pos, emitted) — the
     # victim's exact device state, restored verbatim on re-admission
     swap_state: Optional[tuple] = dataclasses.field(default=None, repr=False)
@@ -110,6 +132,7 @@ class Engine:
                  max_seq: int = 512,
                  sampling: Optional[SamplingParams] = None,
                  scheduler=None, preemption=None, cache_manager=None,
+                 chaos=None,
                  greedy: Optional[bool] = None,
                  preempt: Optional[str] = None,
                  paged: Optional[bool] = None,
@@ -119,7 +142,9 @@ class Engine:
         don't carry their own (greedy when omitted). ``scheduler`` /
         ``preemption`` / ``cache_manager`` take a policy name, a config,
         or a ready instance — see ``repro.serving.scheduler`` and
-        ``repro.serving.cache_manager``.
+        ``repro.serving.cache_manager``. ``chaos`` takes a
+        ``serving.chaos.ChaosInjector`` (or a plain ``reliability.Fault``
+        list) whose scheduled faults are injected into the decode loop.
 
         ``greedy=``, ``preempt=``, and ``paged=``/``page_size=``/
         ``num_pages=`` are the pre-layered kwargs, kept as deprecation
@@ -162,8 +187,16 @@ class Engine:
         self.page_size = getattr(self.cm, "page_size", None)
         self.num_pages = getattr(self.cm, "num_pages", None)
         self.cache = self.cm.init()
+        self.chaos = None
+        if chaos is not None:
+            self.chaos = chaos if hasattr(chaos, "on_step") \
+                else ChaosInjector(chaos)
         self.finished: list[Request] = []
         self.preemptions = 0
+        self.recoveries = 0
+        self._lifecycle = {"done": 0, "aborted": 0, "rejected": 0,
+                           "failed": 0, "deadline": 0}
+        self._has_deadlines = False
         self._arrivals = 0
         self._pad_ok = registry.pad_prefill_ok(cfg)
         # device-resident per-slot decode state (+ per-slot sampling
@@ -421,7 +454,128 @@ class Engine:
         req.t_submit = time.perf_counter()
         req.arrival = self._arrivals
         self._arrivals += 1
+        if req.deadline_s is not None:
+            self._has_deadlines = True
+        msg = self._admission_error(req)
+        if msg is not None:
+            self._finish(req, "rejected", msg)
+            return
         self.scheduler.push(req)
+
+    def _admission_error(self, req: Request) -> Optional[str]:
+        """Admission validation: the reason ``req`` can never be served
+        (rejected up front, instead of wedging the FIFO head or blowing
+        up inside a jitted prefill), or None when it is admissible."""
+        prompt = np.asarray(req.prompt)
+        n = len(prompt)
+        if n == 0:
+            return "empty prompt"
+        if prompt.ndim == 1:           # token frontend
+            if not np.issubdtype(prompt.dtype, np.integer):
+                return ("token prompt must be integer-typed, got "
+                        f"{prompt.dtype}")
+            lo, hi = int(prompt.min()), int(prompt.max())
+            if lo < 0 or hi >= self.cfg.vocab:
+                return (f"token id {lo if lo < 0 else hi} outside "
+                        f"[0, {self.cfg.vocab})")
+        else:                          # frames frontend [S, D]
+            if not np.all(np.isfinite(prompt)):
+                return "non-finite values in frame prompt"
+        if n > self.max_seq - 1:
+            return (f"prompt length {n} cannot fit max_seq={self.max_seq} "
+                    "(no room to emit a token)")
+        return self.cm.infeasible(n)
+
+    def _finish(self, req: Request, reason: str,
+                error: Optional[str] = None) -> None:
+        """Terminal bookkeeping for every lifecycle outcome."""
+        req.done = True
+        req.finish_reason = reason
+        req.error = error
+        self.finished.append(req)
+        if reason in self._lifecycle:
+            self._lifecycle[reason] += 1
+
+    def _cancel_resident(self, i: int, reason: str,
+                         error: Optional[str] = None) -> None:
+        """Pull slot ``i``'s occupant out of residency and finish it:
+        deactivate the device slot (later dispatches route its masked
+        writes to the trap page) and release its pages through the normal
+        ``CacheManager.evict`` path — private pages free, tree-shared
+        prefix pages survive through their radix refs. The caller must
+        have drained the pending emit first (the overlapped readback
+        snapshot must not resurrect the request)."""
+        assert self._pending is None
+        slot = self.slots[i]
+        req = slot.req
+        slot.req = None
+        slot.dactive = False
+        slot.dpos = slot.demitted = 0
+        self._active = self._active.at[i].set(False)
+        self.cm.evict(i)
+        self._finish(req, reason, error)
+
+    def abort(self, rid: int, *, reason: str = "aborted",
+              error: Optional[str] = None) -> bool:
+        """Cancel the live request named ``rid`` wherever it currently
+        lives — waiting (including swapped-out preemption victims) or
+        resident mid-decode. True when a live request was found; the
+        request is finished (usually ``finish_reason="aborted"``) when
+        the call returns. A resident target is settled through a drain
+        first, so an abort that races the natural finish resolves to
+        whichever happened first."""
+        for req in self.scheduler.waiting():
+            if req.rid == rid and not req.done:
+                self.scheduler.remove(req)
+                req.swap_state = None    # swapped victim: pages were freed
+                self._finish(req, reason, error)
+                return True
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None and slot.req.rid == rid:
+                self._drain()
+                if self.slots[i].req is not None \
+                        and self.slots[i].req.rid == rid:
+                    self._cancel_resident(i, reason, error)
+                return True
+        return False
+
+    def cancel_request(self, req: Request, reason: str = "aborted",
+                       error: Optional[str] = None) -> bool:
+        """``abort`` by identity instead of rid (the facade's handle)."""
+        if req.done:
+            return False
+        if self.scheduler.remove(req):
+            req.swap_state = None
+            self._finish(req, reason, error)
+            return True
+        for i, slot in enumerate(self.slots):
+            if slot.req is req:
+                self._drain()
+                if self.slots[i].req is req:
+                    self._cancel_resident(i, reason, error)
+                return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        """Finish every request whose wall-clock budget ran out — waiting
+        requests leave the queue, resident ones are cancelled through the
+        same rollback path as ``abort``."""
+        now = time.perf_counter()
+
+        def expired(req):
+            return (req.deadline_s is not None
+                    and now - req.t_submit >= req.deadline_s)
+
+        for req in self.scheduler.waiting():
+            if expired(req):
+                self.scheduler.remove(req)
+                req.swap_state = None
+                self._finish(req, "deadline")
+        if any(s.req is not None and expired(s.req) for s in self.slots):
+            self._drain()
+            for i, slot in enumerate(self.slots):
+                if slot.req is not None and expired(slot.req):
+                    self._cancel_resident(i, "deadline")
 
     def _sampling_of(self, req: Request) -> SamplingParams:
         sp = req.sampling if req.sampling is not None \
@@ -434,19 +588,16 @@ class Engine:
             self._greedy_only = False
             self._step_fn = jax.jit(self._make_step(False),
                                     donate_argnums=(1, 2, 3, 4, 5, 7))
-            try:
-                self._compiles_base += int(self._admit_fn._cache_size())
-            except Exception:
-                pass
+            n = _jit_cache_size(self._admit_fn)
+            if n is not None:
+                self._compiles_base += n
             self._admit_fn = jax.jit(
                 self._make_admit(False),
                 donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
             if self._prefix_cache:
-                try:
-                    self._compiles_base += \
-                        int(self._admit_suffix_fn._cache_size())
-                except Exception:
-                    pass
+                n = _jit_cache_size(self._admit_suffix_fn)
+                if n is not None:
+                    self._compiles_base += n
                 self._admit_suffix_fn = jax.jit(
                     self._make_admit_suffix(False),
                     donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
@@ -481,17 +632,15 @@ class Engine:
         self.scheduler.pop()
         pages = jnp.asarray(self.cm.pages_of(i))
         sp = self._sampling_of(req)
-        with _quiet_donation():
-            out = self._restore_fn(
-                self.cache, self._token, self._pos, self._active,
-                self._emitted, self._max_new, self._keys, self._temp,
-                self._topk, self._topp,
-                jax.tree.map(jnp.asarray, saved), jnp.int32(tok),
-                jnp.int32(dpos), jnp.int32(demitted),
-                jnp.int32(req.max_new_tokens),
-                jnp.int32(sp.resolve_seed(req.rid)),
-                jnp.float32(sp.temperature), jnp.int32(sp.top_k),
-                jnp.float32(sp.top_p), jnp.int32(i), pages)
+        try:
+            out = self._dispatch_restore(i, req, sp, pages)
+        except RuntimeError as e:
+            # failure isolation: a faulted swap-in fails this request
+            # alone (the hold rolls back; the slot refills next step)
+            self.cm.evict(i)
+            req.swap_state = None
+            self._finish(req, "failed", f"swap-restore fault: {e}")
+            return True
         (self.cache, self._token, self._pos, self._active, self._emitted,
          self._max_new, self._keys, self._temp, self._topk,
          self._topp) = out
@@ -501,6 +650,20 @@ class Engine:
         slot.demitted = demitted
         slot.dactive = True
         return True
+
+    def _dispatch_restore(self, i: int, req: Request, sp, pages):
+        saved, tok, dpos, demitted, _ = req.swap_state
+        with _quiet_donation():
+            return self._restore_fn(
+                self.cache, self._token, self._pos, self._active,
+                self._emitted, self._max_new, self._keys, self._temp,
+                self._topk, self._topp,
+                jax.tree.map(jnp.asarray, saved), jnp.int32(tok),
+                jnp.int32(dpos), jnp.int32(demitted),
+                jnp.int32(req.max_new_tokens),
+                jnp.int32(sp.resolve_seed(req.rid)),
+                jnp.float32(sp.temperature), jnp.int32(sp.top_k),
+                jnp.float32(sp.top_p), jnp.int32(i), pages)
 
     def _admit(self):
         for i, slot in enumerate(self.slots):
@@ -531,35 +694,46 @@ class Engine:
                         return     # head-of-line: admission waits for pages
                 self.scheduler.pop()
                 sp = self._sampling_of(req)
-                if plan is not None and plan["suffix_start"] > 0:
-                    tok0 = self._dispatch_suffix(i, req, prompt, n, plan, sp)
-                    req.prefix_hit_tokens += plan["suffix_start"]
-                else:
-                    pages_arg = None
-                    if self.paged:
-                        pages_arg = jnp.asarray(
-                            self.cm.prefill_pages(i, n, b))
-                    if b is not None and b > n:
-                        pad = np.zeros((b - n,) + prompt.shape[1:],
-                                       prompt.dtype)
-                        prompt = np.concatenate([prompt, pad])
-                    self._prefill_shapes.add(prompt.shape)
-                    args = (self.params, self.cache, self._token, self._pos,
-                            self._active, self._emitted, self._max_new,
-                            self._keys, self._temp, self._topk, self._topp,
-                            jnp.asarray(prompt), jnp.int32(n), jnp.int32(i),
-                            jnp.int32(req.max_new_tokens),
-                            jnp.int32(len(req.out_tokens) + 1),
-                            jnp.int32(sp.resolve_seed(req.rid)),
-                            jnp.float32(sp.temperature),
-                            jnp.int32(sp.top_k), jnp.float32(sp.top_p))
-                    if self.paged:
-                        args += (pages_arg,)
-                    with _quiet_donation():
-                        out = self._admit_fn(*args)
-                    (self.cache, self._token, self._pos, self._active,
-                     self._emitted, self._max_new, self._keys, self._temp,
-                     self._topk, self._topp, tok0) = out
+                try:
+                    if plan is not None and plan["suffix_start"] > 0:
+                        tok0 = self._dispatch_suffix(i, req, prompt, n,
+                                                     plan, sp)
+                        req.prefix_hit_tokens += plan["suffix_start"]
+                    else:
+                        pages_arg = None
+                        if self.paged:
+                            pages_arg = jnp.asarray(
+                                self.cm.prefill_pages(i, n, b))
+                        if b is not None and b > n:
+                            pad = np.zeros((b - n,) + prompt.shape[1:],
+                                           prompt.dtype)
+                            prompt = np.concatenate([prompt, pad])
+                        self._prefill_shapes.add(prompt.shape)
+                        args = (self.params, self.cache, self._token,
+                                self._pos, self._active, self._emitted,
+                                self._max_new, self._keys, self._temp,
+                                self._topk, self._topp, jnp.asarray(prompt),
+                                jnp.int32(n), jnp.int32(i),
+                                jnp.int32(req.max_new_tokens),
+                                jnp.int32(len(req.out_tokens) + 1),
+                                jnp.int32(sp.resolve_seed(req.rid)),
+                                jnp.float32(sp.temperature),
+                                jnp.int32(sp.top_k), jnp.float32(sp.top_p))
+                        if self.paged:
+                            args += (pages_arg,)
+                        with _quiet_donation():
+                            out = self._admit_fn(*args)
+                        (self.cache, self._token, self._pos, self._active,
+                         self._emitted, self._max_new, self._keys,
+                         self._temp, self._topk, self._topp, tok0) = out
+                except RuntimeError as e:
+                    # failure isolation: a faulted prefill (XLA launch /
+                    # runtime error) fails this request alone — its
+                    # admission hold rolls back and the slot refills on
+                    # the next step
+                    self.cm.evict(i)
+                    self._finish(req, "failed", f"prefill fault: {e}")
+                    continue
                 if self.paged:
                     # the prompt's full pages are now written (prefill
                     # covers 0..n-1) — publish them to the radix tree so
@@ -578,8 +752,7 @@ class Engine:
                     # so it must not decode again. (A fresh admission never
                     # checks — the reference engine always decodes at least
                     # one step after prefill.)
-                    req.done = True
-                    self.finished.append(req)
+                    self._finish(req, "done")
                     self._active = self._active.at[i].set(False)
                     self.cm.evict(i)
                     continue
@@ -681,6 +854,114 @@ class Engine:
                 if victim == i:
                     break              # preempted ourselves; requeued
 
+    # -- failure isolation / crash recovery ----------------------------------
+
+    def _reject_unadmittable_head(self) -> bool:
+        """Infeasibility watchdog: the engine is quiescent (no resident
+        slot, nothing in flight) yet the head of line was not admitted.
+        If the head can NEVER fit — page demand exceeding the whole pool
+        or the sequence budget — reject it instead of deadlocking every
+        request behind it. Transient causes (chaos page holds, custom
+        managers withholding capacity) return False and leave the head
+        queued."""
+        req = self.scheduler.peek()
+        if req is None or req.swap_state is not None:
+            return False               # swapped victims always fit again
+        n = len(req.prompt) + len(req.out_tokens)
+        if n > self.max_seq - 1:
+            msg = (f"sequence length {n} cannot fit max_seq="
+                   f"{self.max_seq} (no room to emit a token)")
+        else:
+            msg = self.cm.infeasible(n)
+        if msg is None:
+            return False
+        self.scheduler.remove(req)      # not an admission: no pop stats
+        self._finish(req, "rejected", msg)
+        return True
+
+    def _recover_step_fault(self, exc: BaseException) -> None:
+        """Crash-consistent rollback after a faulted decode dispatch.
+
+        The fault surfaced *in place of* the dispatch (a failed XLA
+        launch — or the chaos harness's stand-in for one — leaves its
+        donated inputs unconsumed), so carry buffers and cache still hold
+        the valid pre-step state. Sequence: settle the overlapped emit
+        (it predates the fault), quarantine the faulting slot's request
+        (``exc.slot`` when the fault names one, else the preemption
+        policy's victim), swap every surviving occupant's pages + device
+        state to host byte-for-byte, reset the device pool and carry
+        outright, and requeue the survivors — their restored streams
+        finish bit-identical to an undisturbed run. If the carry WAS lost
+        with the fault (mid-kernel device failure), the byte-exact read
+        raises and survivors fall back to recompute (token frontends) or
+        fail (frames)."""
+        self._drain()
+        bad = getattr(exc, "slot", None)
+        if bad is not None and not (0 <= bad < self.n_slots
+                                    and self.slots[bad].req is not None):
+            bad = None
+        occ = [(i, s.req) for i, s in enumerate(self.slots)
+               if s.req is not None]
+        if bad is None and occ:
+            bad = self.preemption.select_victim(occ)
+        survivors: list[Request] = []
+        for i, slot in enumerate(self.slots):
+            req = slot.req
+            if req is None or i == bad:
+                continue
+            req.swap_state = None
+            if self.paged:
+                try:
+                    # byte-exact swap-out BEFORE the pool reset — restore
+                    # then replays the exact device state, keeping the
+                    # survivor's stream bit-identical
+                    owned = self.cm.pages_of(i)
+                    saved = self.cm.read(self.cache, jnp.asarray(owned))
+                    req.swap_state = (
+                        jax.tree.map(np.asarray, saved),
+                        int(np.asarray(self._token)[i]),
+                        slot.dpos, slot.demitted, len(owned))
+                except RuntimeError:
+                    req.swap_state = None   # carry died with the fault
+            if req.swap_state is None \
+                    and np.asarray(req.prompt).ndim != 1:
+                # frames frontend without a byte-exact copy: generated
+                # tokens cannot be folded back into a float prompt
+                self._finish(req, "failed",
+                             f"lost to device-fault recovery: {exc}")
+                slot.req = None
+                continue
+            req.preemptions += 1
+            survivors.append(req)
+        for i, slot in enumerate(self.slots):
+            req, slot.req = slot.req, None
+            slot.dactive = False
+            slot.dpos = slot.demitted = 0
+            self.cm.evict(i)
+            if req is not None and i == bad:
+                self._finish(req, "failed", f"device step fault: {exc}")
+        # reversed: slot 0's occupant ends up at the head of the queue,
+        # so re-admission preserves the slot order survivors held
+        for req in reversed(survivors):
+            self.scheduler.requeue(req)
+        if self.paged:
+            # the radix tree's cached KV died with the pool
+            self.cm.clear_tree()
+            self.cm.pool.check()
+        # rebuild the device-side state (same shapes: no retrace)
+        self.cache = self.cm.init()
+        slots = self.n_slots
+        self._token = jnp.zeros((slots,), jnp.int32)
+        self._pos = jnp.zeros((slots,), jnp.int32)
+        self._active = jnp.zeros((slots,), jnp.bool_)
+        self._emitted = jnp.zeros((slots,), jnp.int32)
+        self._max_new = jnp.zeros((slots,), jnp.int32)
+        self._keys = jnp.zeros((slots, 2), jnp.uint32)
+        self._temp = jnp.zeros((slots,), jnp.float32)
+        self._topk = jnp.zeros((slots,), jnp.int32)
+        self._topp = jnp.ones((slots,), jnp.float32)
+        self.recoveries += 1
+
     # -- one engine step -----------------------------------------------------
 
     def has_work(self) -> bool:
@@ -689,6 +970,11 @@ class Engine:
                     or any(s.req is not None for s in self.slots))
 
     def step(self) -> bool:
+        step_no = self._steps
+        if self.chaos is not None:
+            self.chaos.on_step(self, step_no)
+        if self._has_deadlines:
+            self._expire_deadlines()
         if self._pending is not None and \
                 (len(self.scheduler)
                  and all(s.req is not None for s in self.slots)
@@ -710,15 +996,32 @@ class Engine:
             if self.paged:
                 self._ensure_pages()
             if not any(s.req is not None for s in self.slots):
+                if len(self.scheduler):
+                    # quiescent with a wedged head of line: reject it if
+                    # it can never be admitted (deadlock watchdog) …
+                    if self._reject_unadmittable_head():
+                        return True
+                    # … or end a chaos page hold that alone blocks
+                    # progress, and retry on the next step
+                    if self.chaos is not None and self.chaos.relent(self):
+                        return True
                 return False
         args = (self.params, self.cache, self._token, self._pos,
                 self._active, self._emitted, self._max_new, self._keys,
                 self._temp, self._topk, self._topp)
         args += tuple(jnp.asarray(x) for x in self.cm.step_extra())
-        with _quiet_donation():
-            out = self._step_fn(*args)
+        try:
+            if self.chaos is not None:
+                self.chaos.pre_dispatch(self, step_no)
+            with _quiet_donation():
+                out = self._step_fn(*args)
+        except RuntimeError as e:     # XlaRuntimeError subclasses this
+            self._recover_step_fault(e)
+            return True
         (self.cache, self._token, self._pos, self._active,
          self._emitted, self._keys, emit) = out
+        if self.chaos is not None:
+            emit = self.chaos.filter_emit(step_no, emit)
         self._steps += 1
         # mirror the device's deterministic stop conditions on the host
         # shadows (the readback of this step is still in flight)
@@ -757,12 +1060,30 @@ class Engine:
         tok = np.asarray(emit_tok)
         fin = np.asarray(done)
         for i, req in enumerate(reqs):
-            if req is None or tok[i] < 0:
+            if req is None or req.done or tok[i] == -1:
+                # ``req.done``: a request quarantined by the corrupt-
+                # readback path below was still device-active when the
+                # overlapped NEXT snapshot was taken — its late tokens
+                # must not resurrect the finished stream
                 continue
-            req.out_tokens.append(int(tok[i]))
+            t = int(tok[i])
+            if t < 0 or t >= self.cfg.vocab:
+                # corrupt/NaN readback: a valid emit is -1 or a vocab id,
+                # nothing else. Only this request is quarantined — the
+                # other slots' device state is untouched, so their
+                # streams continue undisturbed.
+                if self.slots[i].req is req:
+                    self.slots[i].req = None
+                    self.slots[i].dactive = False
+                    self._active = self._active.at[i].set(False)
+                    self.cm.evict(i)
+                self._finish(req, "failed",
+                             f"corrupt readback: token {t} outside "
+                             f"[0, {self.cfg.vocab})")
+                continue
+            req.out_tokens.append(t)
             if fin[i]:
-                req.done = True
-                self.finished.append(req)
+                self._finish(req, "done")
                 if self.slots[i].req is req:
                     if self._prefix_cache:
                         # publish the full sequence's pages before freeing
@@ -795,14 +1116,15 @@ class Engine:
         """Decode steps, prefill retrace count, bucket coverage, scheduler
         counters, and (paged) preemption + page-pool utilization/
         fragmentation."""
-        try:
-            prefill_compiles = self._compiles_base \
-                + self._admit_fn._cache_size()
-            if self._prefix_cache:
-                prefill_compiles += self._admit_suffix_fn._cache_size()
-        except Exception:
+        n = _jit_cache_size(self._admit_fn)
+        if n is None:       # private jax API gone: shape-count fallback
             prefill_compiles = len(self._prefill_shapes) \
                 + len(self._suffix_shapes)
+        else:
+            prefill_compiles = self._compiles_base + n
+            if self._prefix_cache:
+                prefill_compiles += \
+                    _jit_cache_size(self._admit_suffix_fn) or 0
         out = {
             "steps": self._steps,
             "prefill_compiles": int(prefill_compiles),
@@ -812,8 +1134,16 @@ class Engine:
             "slots": self.n_slots,
             "paged": self.paged,
             "preemptions": self.preemptions,
+            # request-lifecycle outcomes (exact-gated by the bench CI)
+            "aborted": self._lifecycle["aborted"],
+            "rejected": self._lifecycle["rejected"],
+            "failed": self._lifecycle["failed"],
+            "deadline_expired": self._lifecycle["deadline"],
+            "recoveries": self.recoveries,
         }
         out.update(self.scheduler.stats())
+        if self.chaos is not None:
+            out.update(self.chaos.stats())
         if self.paged:
             out["preempt_mode"] = self.preempt_mode
             out.update(self.cm.stats())

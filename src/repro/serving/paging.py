@@ -158,6 +158,27 @@ class PagePool:
         self.shared[slot].clear()
         self.table[slot, :] = TRAP_PAGE
 
+    # -- chaos hooks --------------------------------------------------------
+
+    def seize_free(self, n: int) -> list[int]:
+        """Pull up to ``n`` pages off the free list and pin them with an
+        external ref (the chaos harness's page-pool-exhaustion fault).
+        Seized pages look exactly like tree-retained pages to every
+        invariant, so ``check()`` keeps holding while the hold is live.
+        Returns the seized page ids (possibly fewer than ``n``)."""
+        pages = []
+        for _ in range(min(n, len(self._free))):
+            page = self._free.pop()
+            self.refcnt[page] = 1
+            self._ext[page] = 1
+            pages.append(page)
+        return pages
+
+    def release_seized(self, pages: list[int]) -> None:
+        """End a ``seize_free`` hold: drop the external pins."""
+        for page in pages:
+            self.drop(page)
+
     def stats(self) -> dict:
         """Occupancy snapshot (consumed by the paged ``CacheManager``)."""
         n_shared = sum(1 for p in range(1, self.num_pages + 1)

@@ -113,6 +113,20 @@ class RadixCache:
     def has_evictable(self, pool: PagePool) -> bool:
         return bool(self._evictable_leaves(pool))
 
+    def clear(self, pool: PagePool) -> int:
+        """Drop every tree reference (crash recovery: the cached KV died
+        with the device pool, so the whole tree is poisoned). Unlike
+        ``evict`` this also drops interior nodes and pages that live
+        slots still map — the *tree's* ref goes away; slot mappings keep
+        their own refs. Returns the number of refs dropped."""
+        dropped = 0
+        for page in self.pages():
+            pool.drop(page)
+            dropped += 1
+        self.root = _Node((), None, None)
+        self._clock = 0
+        return dropped
+
     # -- stats --------------------------------------------------------------
 
     def pages(self) -> list[int]:

@@ -10,6 +10,9 @@ decode step) stays in the engine. The protocol is deliberately small:
                    is head-of-line: if the cache manager cannot hold
                    ``peek()`` yet, the engine waits rather than skipping it
     pop()          commit the admission of ``peek()``
+    remove(req)    pull one waiting request out of line (abort/deadline);
+                   identity comparison, True when found
+    waiting()      snapshot list of waiting requests (no order guarantee)
     __len__        waiting-request count
     stats()        {"scheduler", "sched_admitted", "sched_reorders"}
 
@@ -43,6 +46,8 @@ class Scheduler(Protocol):
     def requeue(self, req) -> None: ...
     def peek(self): ...
     def pop(self): ...
+    def remove(self, req) -> bool: ...
+    def waiting(self) -> list: ...
     def __len__(self) -> int: ...
     def stats(self) -> dict: ...
 
@@ -59,6 +64,22 @@ class _BaseScheduler:
         oldest = min(r.arrival for r in waiting)
         if req.arrival != oldest:
             self.reorders += 1
+
+    def waiting(self) -> list:
+        """Snapshot of the waiting set (both backends keep it in _q)."""
+        return list(self._q)
+
+    def remove(self, req) -> bool:
+        """Pull ``req`` out of line by IDENTITY (see ``pop`` for why
+        equality comparison is off the table); True when found. Used by
+        abort/deadline expiry — does not count as an admission."""
+        for i, r in enumerate(self._q):
+            if r is req:
+                del self._q[i]
+                if getattr(req, "_requeue_seq", None) is not None:
+                    req._requeue_seq = None
+                return True
+        return False
 
     def stats(self) -> dict:
         return {"scheduler": self.name, "sched_admitted": self.admitted,

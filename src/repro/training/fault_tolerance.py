@@ -16,19 +16,26 @@ import json
 import os
 import time
 
+from repro.reliability import Fault, FaultSchedule
+
 
 class FailureInjector:
     """Deterministic fault injection for tests/drills: raises at a chosen
-    step, once."""
+    step, once. Thin wrapper over the shared ``repro.reliability``
+    schedule that the serving chaos harness also builds on."""
 
     def __init__(self, fail_at_step: int | None = None):
         self.fail_at_step = fail_at_step
-        self.fired = False
+        faults = ([] if fail_at_step is None
+                  else [Fault(kind="raise", step=fail_at_step)])
+        self._schedule = FaultSchedule(faults)
+
+    @property
+    def fired(self) -> bool:
+        return self._schedule.fired > 0
 
     def maybe_fail(self, step: int):
-        if (self.fail_at_step is not None and not self.fired
-                and step == self.fail_at_step):
-            self.fired = True
+        if self._schedule.due(step):
             raise RuntimeError(f"injected failure at step {step}")
 
 

@@ -128,7 +128,10 @@ class PagePoolMachine(RuleBasedStateMachine):
 
     Mirrors the engine's usage: shared mappings only target live pages,
     CoW only targets a slot's shared pages and is preceded by ensuring a
-    free page, and ``release`` doubles as admission rollback."""
+    free page, and ``release`` doubles as admission rollback. Chaos
+    actions ride along: ``seize_free`` page holds (the injector's
+    pool-exhaustion fault) and abort-style compound rollbacks (slot
+    release + a batch of tree drops in one step)."""
 
     SLOTS, NUM_PAGES, PER_SLOT = 3, 12, 6
 
@@ -138,6 +141,7 @@ class PagePoolMachine(RuleBasedStateMachine):
                              slots=self.SLOTS,
                              pages_per_slot=self.PER_SLOT)
         self.tree: list[int] = []       # simulated radix-tree references
+        self.seized: list[int] = []     # live chaos page holds
 
     def _live(self):
         return [p for p in range(1, self.NUM_PAGES + 1)
@@ -206,6 +210,34 @@ class PagePoolMachine(RuleBasedStateMachine):
         assert dst not in self.pool.shared[slot]
         assert self.pool.owned[slot][idx] == dst != src
         assert self.pool.refcnt[dst] == 1
+
+    @rule(n=st.integers(1, 4))
+    def chaos_seize(self, n):
+        free_before = self.pool.num_free
+        got = self.pool.seize_free(n)
+        assert len(got) == min(n, free_before)
+        assert all(self.pool.refcnt[p] == 1 and self.pool._ext[p] == 1
+                   for p in got), "seized pages must be ext-pinned"
+        self.seized.extend(got)
+
+    @precondition(lambda self: self.seized)
+    @rule(data=st.data())
+    def chaos_release(self, data):
+        k = data.draw(st.integers(1, len(self.seized)), label="release k")
+        drop, self.seized = self.seized[:k], self.seized[k:]
+        self.pool.release_seized(drop)
+
+    @rule(slot=slots, data=st.data())
+    def abort_rollback(self, data):
+        """Abort-style compound rollback: drop the slot's mappings AND a
+        batch of tree retains in one step — what ``Engine.abort`` does
+        for a resident request holding radix-shared prefix pages."""
+        n_drop = data.draw(st.integers(0, min(3, len(self.tree))),
+                           label="tree drops")
+        self.pool.release(slot)
+        for _ in range(n_drop):
+            self.pool.drop(self.tree.pop())
+        assert not self.pool.owned[slot] and not self.pool.shared[slot]
 
     @invariant()
     def pool_invariants(self):
