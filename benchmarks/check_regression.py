@@ -58,11 +58,24 @@ def extract(bench: dict) -> dict:
     """Slim the gated metrics out of a full bench.json payload."""
     out = {"kernels": {}, "geomean_speedup": round(
         bench.get("geomean_speedup", 0.0), 4), "serving": {}}
+    failed = []
     for k in bench.get("kernels", []):
+        if k.get("failed"):         # keep-going casualty: no metrics row
+            failed.append(k["kernel"])
+            continue
         out["kernels"][k["kernel"]] = {
             "speedup": round(k["speedup"], 4),
             "correct": bool(k["correct"]),
         }
+    # search-infra counters are deterministic (no chaos in the CI bench
+    # run): any nonzero quarantine/recovery or failed kernel means the
+    # isolation layer fired when it shouldn't have
+    st = bench.get("stage_totals", {})
+    out["search_infra"] = {
+        "quarantined": int(st.get("quarantined", 0)),
+        "recoveries": int(st.get("recoveries", 0)),
+        "failed_kernels": sorted(failed),
+    }
     for row in bench.get("serving", []):
         # gate the device engine plus the shared_prefix no-cache and
         # chaos_mix no-chaos twins (reference rows exist only under
@@ -99,6 +112,18 @@ def compare(current: dict, baseline: dict, *, kernel_tol: float,
     if gbase and current["geomean_speedup"] < gbase * (1.0 - kernel_tol):
         bad.append(f"geomean speedup {current['geomean_speedup']:.3f}x < "
                    f"baseline {gbase:.3f}x - {kernel_tol:.0%}")
+    if exact and "search_infra" in baseline:
+        base_si = baseline["search_infra"]
+        cur_si = current.get("search_infra", {})
+        for field in ("quarantined", "recoveries"):
+            if base_si.get(field, 0) != cur_si.get(field, 0):
+                bad.append(f"search_infra: {field} changed "
+                           f"{base_si.get(field, 0)} -> "
+                           f"{cur_si.get(field, 0)} (deterministic counter; "
+                           f"if intended, refresh baseline.json)")
+        if cur_si.get("failed_kernels"):
+            bad.append(f"search_infra: kernels failed during the bench run: "
+                       f"{cur_si['failed_kernels']}")
     for key, base in baseline.get("serving", {}).items():
         cur = current["serving"].get(key)
         if cur is None:
@@ -159,7 +184,8 @@ def main(argv=None) -> int:
     bad = compare(current, baseline, kernel_tol=args.kernel_tol,
                   serving_tol=args.serving_tol, exact=not args.no_exact)
     n_gates = (len(baseline.get("kernels", {}))
-               + len(baseline.get("serving", {})) + 1)
+               + len(baseline.get("serving", {})) + 1
+               + (1 if baseline.get("search_infra") else 0))
     if bad:
         print(f"# BENCH REGRESSION ({len(bad)} of {n_gates} gates):")
         for msg in bad:

@@ -14,6 +14,15 @@ Search evaluations go through the tiered engine with a **persistent**
 evaluation cache under ``benchmarks/artifacts/evalcache/``: a second
 consecutive run revalidates nothing (hit-rate ~1.0 is printed per search).
 Delete that directory to start cold.
+
+Robustness (README § "Robust search"): every search writes a write-ahead
+journal under ``benchmarks/artifacts/journal/``; ``--resume`` replays it
+after a kill so the run continues from the first unfinished evaluation
+with a bit-identical Log. ``--isolation process`` evaluates candidates in
+sandboxed spawn workers (deadlines, retries, quarantine); ``--chaos``
+drills that path with injected worker kills/hangs/corruption. One
+kernel's infra failure marks it ``failed`` in bench.json and the run
+continues (keep-going).
 """
 
 from __future__ import annotations
@@ -28,6 +37,7 @@ import numpy as np
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 BENCH_JSON = os.path.join(ART, "bench.json")
 EVALCACHE = os.path.join(ART, "evalcache", "cache.jsonl")
+JOURNAL_DIR = os.path.join(ART, "journal")
 
 # Hoisted hi-fi measurement rig: one ProfilingAgent (reps=10**6) and one
 # memoized suite per kernel, shared by table2/table3/table4/bench_json —
@@ -202,7 +212,12 @@ def bench_json(results=None, *, strategy="greedy", rounds: int = 5,
                                kernels=registered_kernels(),
                                cache=EvalCache())
     kernels = []
+    failed = []
     for name, log in results.items():
+        if isinstance(log, Exception):    # keep-going: SearchFailure
+            failed.append({"kernel": name, "failed": True,
+                           "error": getattr(log, "detail", repr(log))})
+            continue
         space = SPACES[name]
         tests = _suite(space)
         base = _eval(space, space.baseline, tests)
@@ -224,7 +239,8 @@ def bench_json(results=None, *, strategy="greedy", rounds: int = 5,
             "stages": log.meta.get("stages", {}),
             "variant": best.code.describe(),
         })
-    geo = float(np.exp(np.mean([np.log(k["speedup"]) for k in kernels])))
+    geo = float(np.exp(np.mean([np.log(k["speedup"]) for k in kernels]))) \
+        if kernels else 0.0
     stage_totals = {}
     for k in kernels:
         for key, v in k["stages"].items():
@@ -232,7 +248,7 @@ def bench_json(results=None, *, strategy="greedy", rounds: int = 5,
     if serving is None:   # standalone bench_json: representative cells
         serving = serving_bench(csv=False, archs=("qwen2-0.5b",),
                                 mixes=("ragged_burst", "oversubscribed"))
-    payload = {"kernels": kernels, "geomean_speedup": geo,
+    payload = {"kernels": kernels + failed, "geomean_speedup": geo,
                "stage_totals": stage_totals, "serving": serving}
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
@@ -261,11 +277,28 @@ def main(argv=None) -> None:
                              "every registered kernel (default: the paper's "
                              "three; flash_decode's interpret-mode "
                              "validation adds minutes per genome)")
+    parser.add_argument("--isolation", default="thread",
+                        choices=("thread", "process"),
+                        help="run candidate evaluations in-process (thread) "
+                             "or in sandboxed spawn workers (process): "
+                             "crashes/hangs cost a worker, never the run")
+    parser.add_argument("--resume", action="store_true",
+                        help="replay the write-ahead search journals under "
+                             "benchmarks/artifacts/journal/ and continue "
+                             "from the first unfinished evaluation")
+    parser.add_argument("--chaos", action="store_true",
+                        help="drill the isolation layer: inject a worker "
+                             "kill, an over-deadline hang, and a corrupted "
+                             "result (implies --isolation process and "
+                             "--no-evalcache)")
+    parser.add_argument("--search-only", action="store_true",
+                        help="run only the kernel searches (skip paper "
+                             "tables, roofline, and serving benches)")
     args = parser.parse_args(argv)
 
     os.makedirs(ART, exist_ok=True)
     from repro.core import optimize_all, registered_kernels
-    from repro.search import EvalCache
+    from repro.search import EvalCache, SearchJournal
     paper = ("merge_attn_states_lse", "fused_add_rmsnorm", "silu_and_mul")
     if args.kernels == "all":
         kernels = registered_kernels()
@@ -273,25 +306,64 @@ def main(argv=None) -> None:
         kernels = tuple(args.kernels.split(","))
     else:
         kernels = paper
+
+    pool_config = None
+    if args.chaos:
+        # chaos quarantines genomes on purpose; never leak those verdicts
+        # into the shared persistent evalcache
+        args.isolation, args.no_evalcache = "process", True
+        from repro.reliability import Fault, SearchChaosInjector
+        pool_config = {
+            "deadline_s": 10.0,
+            "chaos": SearchChaosInjector([Fault("kill_worker", step=1),
+                                          Fault("hang_eval", step=3,
+                                                seconds=30.0),
+                                          Fault("corrupt_result", step=5)]),
+        }
     cache = EvalCache(persist_path=None if args.no_evalcache else EVALCACHE)
     if cache.preloaded:
         print(f"# evalcache: preloaded {cache.preloaded} proven evaluations "
               f"from {EVALCACHE}")
+
+    journals = {}
+    for k in kernels:
+        jpath = os.path.join(JOURNAL_DIR,
+                             f"{k}-{args.strategy}-r{args.rounds}.jsonl")
+        if not args.resume and os.path.exists(jpath):
+            os.remove(jpath)        # fresh run: yesterday's journal is stale
+        journals[k] = SearchJournal(jpath)
+
     results = optimize_all(rounds=args.rounds, strategy=args.strategy,
                            kernels=kernels, cache=cache,
-                           workers=args.workers)
+                           workers=args.workers, isolation=args.isolation,
+                           pool_config=pool_config, journals=journals,
+                           keep_going=True)
+    ok_results = {k: v for k, v in results.items()
+                  if not isinstance(v, Exception)}
     print("# Search engine — per-search wall-clock, cache, cascade skips")
     for name, log in results.items():
+        if isinstance(log, Exception):
+            print(f"search/{name},,FAILED="
+                  f"{getattr(log, 'detail', repr(log))!r}")
+            continue
         c, s = log.meta.get("cache", {}), log.meta.get("stages", {})
         total = c.get("hits", 0) + c.get("misses", 0)
         rate = c.get("hits", 0) / total if total else 0.0
+        j = log.meta.get("journal", {})
         print(f"search/{name},{log.meta.get('wall_s', 0.0)*1e6:.0f},"
               f"hit_rate={rate:.2f},"
               f"screened={s.get('screened_infeasible', 0) + s.get('screened_dominated', 0)},"
               f"smoke_fails={s.get('validations_smoke_failed', 0)},"
               f"oracle_computations={s.get('oracle_computations', 0)},"
-              f"validation_test_runs={s.get('validation_test_runs', 0)}")
-    paper_three = {k: v for k, v in results.items() if k in paper}
+              f"validation_test_runs={s.get('validation_test_runs', 0)},"
+              f"quarantined={s.get('quarantined', 0)},"
+              f"recoveries={s.get('recoveries', 0)},"
+              f"resumed={j.get('resumed', False)}")
+    if args.search_only:
+        if args.json:
+            bench_json(results, serving=[])
+        return
+    paper_three = {k: v for k, v in ok_results.items() if k in paper}
     # guard the falsy-empty-dict case: tableX(None-or-empty) would silently
     # re-run three fresh 5-round optimizations, ignoring the CLI flags
     t2 = table2_main(paper_three) if paper_three else []

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Any, Sequence
 
 import jax.numpy as jnp
@@ -80,7 +81,8 @@ class TestingAgent:
 
     def validate(self, space: KernelSpace, variant,
                  tests: Sequence[TestCase], *,
-                 oracle=None) -> tuple[bool, float]:
+                 oracle=None,
+                 timeout_s: float | None = None) -> tuple[bool, float]:
         """Check ``variant`` against the oracle over T.
 
         Tolerance is the standard mixed bound ``err <= atol + rtol*|want|``
@@ -97,9 +99,23 @@ class TestingAgent:
         callable ``oracle(test) -> outputs`` — so the jnp oracle (which
         depends only on the suite, never the genome) is not recomputed for
         every candidate.
+
+        ``timeout_s`` is a *cooperative* deadline checked between test
+        cases: exceeding it raises ``reliability.EvalTimeout``. It cannot
+        interrupt a single wedged interpret-mode run — that hard guarantee
+        is the worker pool's join-timeout kill; this budget just stops a
+        slow-but-alive validation from burning the whole suite.
         """
+        deadline = None
+        if timeout_s is not None:
+            deadline = time.monotonic() + timeout_s
         worst = 0.0
         for i, t in enumerate(tests):
+            if deadline is not None and time.monotonic() > deadline:
+                from repro.reliability import EvalTimeout
+                raise EvalTimeout(
+                    f"validation of {space.name} exceeded {timeout_s}s "
+                    f"({i}/{len(tests)} cases done)")
             rtol, atol = _tolerance(t.shape_info["dtype"])
             got = space.run(variant, *t.args, interpret=True)
             if oracle is None:

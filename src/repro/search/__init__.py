@@ -7,22 +7,32 @@ genome is validated/profiled at most once), the tiered evaluation engine
 (cost-model screen -> smoke test -> full suite, shared-oracle memoization,
 concurrent ``evaluate_many``), and interchangeable search strategies
 (greedy chain, beam, population) that share the four Astra agents.
+
+Robustness layer (README § "Robust search"): ``EvalWorkerPool`` runs
+evaluations in crash-isolated spawn workers with deadlines, retries, and
+genome quarantine; ``SearchJournal`` makes a search resumable after
+``kill -9`` with a bit-identical ``Log``.
 """
 
-from repro.search.cache import EvalCache, code_version_salt
+from repro.search.cache import (EvalCache, code_version_salt, decode_result,
+                                encode_result)
 from repro.search.evaluator import EvalStats, TieredEvaluator
-from repro.search.orchestrator import (SearchOrchestrator, optimize,
-                                       optimize_all, reintegrate)
+from repro.search.journal import JournalMismatch, SearchJournal
+from repro.search.orchestrator import (SearchFailure, SearchOrchestrator,
+                                       optimize, optimize_all, reintegrate)
 from repro.search.strategies import (BeamSearch, GreedyChain, Population,
                                      SearchContext, SearchStrategy,
                                      resolve_strategy)
 from repro.search.types import (Candidate, EvalResult, genome_digest,
                                 genome_key, suite_digest)
+from repro.search.workers import EvalWorkerPool, Outcome
 
 __all__ = [
     "BeamSearch", "Candidate", "EvalCache", "EvalResult", "EvalStats",
-    "GreedyChain", "Population", "SearchContext", "SearchOrchestrator",
-    "SearchStrategy", "TieredEvaluator", "code_version_salt",
-    "genome_digest", "genome_key", "optimize", "optimize_all",
-    "reintegrate", "resolve_strategy", "suite_digest",
+    "EvalWorkerPool", "GreedyChain", "JournalMismatch", "Outcome",
+    "Population", "SearchContext", "SearchFailure", "SearchJournal",
+    "SearchOrchestrator", "SearchStrategy", "TieredEvaluator",
+    "code_version_salt", "decode_result", "encode_result", "genome_digest",
+    "genome_key", "optimize", "optimize_all", "reintegrate",
+    "resolve_strategy", "suite_digest",
 ]

@@ -25,7 +25,14 @@ a JSON-lines file keyed by the same digests plus a **code-version salt**
 earlier process already proved — and a source change invalidates the whole
 file rather than serving stale verdicts. Screened entries are never
 persisted (they carry no correctness verdict and cost almost nothing to
-recompute).
+recompute); quarantined (``finish_reason="crashed"``) entries ARE — a
+genome that repeatedly killed its worker must never be re-run, not even by
+a later process.
+
+A process killed mid-append (``kill -9``, OOM) leaves a torn final line.
+The loader tolerates it: the valid prefix is kept, the torn tail is
+reported via ``warnings.warn`` and physically truncated on the next flush,
+and ``benchmarks/run.py`` proceeds instead of crashing.
 """
 
 from __future__ import annotations
@@ -36,6 +43,7 @@ import hashlib
 import json
 import os
 import threading
+import warnings
 from collections import Counter
 
 from repro.search.types import EvalResult, genome_digest, suite_digest
@@ -75,6 +83,38 @@ def _jsonable(obj):
         return str(obj)
 
 
+def encode_result(result: EvalResult) -> dict:
+    """JSON-able payload for one evaluation outcome — shared between the
+    persistent cache and the search journal so both round-trip the same
+    fields. ``cached``/``replayed`` are delivery-time flags, not outcomes,
+    and are never persisted."""
+    return {
+        "passed": bool(result.passed),
+        "max_err": float(result.max_err),
+        "validated": bool(result.validated),
+        "screened": bool(result.screened),
+        "finish_reason": result.finish_reason,
+        "error": result.error,
+        "failed_test": int(result.failed_test),
+        "profile": dataclasses.asdict(result.profile),
+    }
+
+
+def decode_result(rec: dict, *, replayed: bool = False) -> EvalResult:
+    """Inverse of ``encode_result`` (tolerates records from older formats
+    that predate the lifecycle fields)."""
+    from repro.core.agents import Profile
+    return EvalResult(
+        bool(rec["passed"]), float(rec["max_err"]),
+        Profile(**rec["profile"]),
+        validated=bool(rec["validated"]),
+        screened=bool(rec.get("screened", False)),
+        finish_reason=rec.get("finish_reason", "ok"),
+        error=rec.get("error"),
+        failed_test=int(rec.get("failed_test", -1)),
+        replayed=replayed)
+
+
 class EvalCache:
     """Memoizes (validate, profile) per unique (kernel, genome, suite)."""
 
@@ -89,6 +129,10 @@ class EvalCache:
         self._validate_runs: Counter = Counter()
         self._profile_runs: Counter = Counter()
         self.persist_path = persist_path
+        # byte offset to truncate the persistent file to before the next
+        # append — set when the loader finds a torn trailing line (the
+        # artifact of a killed writer)
+        self._truncate_at: int | None = None
         if persist_path:
             self._load_persistent()
 
@@ -120,7 +164,7 @@ class EvalCache:
         under the key lock)."""
         entry = self.get(key)
         if entry is not None and (entry.validated or entry.screened
-                                  or not validate):
+                                  or entry.failed_infra or not validate):
             self.count_hit()
             return dataclasses.replace(entry, cached=True)
         return None
@@ -149,6 +193,15 @@ class EvalCache:
     def note_profile_run(self, key: tuple) -> None:
         with self._lock:
             self._profile_runs[key] += 1
+
+    def clear_replayed(self, key: tuple) -> None:
+        """Drop the journal-replay marker after its one-time delivery so a
+        later search hitting the same entry doesn't re-apply its failure
+        statistics."""
+        with self._lock:
+            entry = self._store.get(key)
+            if entry is not None and entry.replayed:
+                self._store[key] = dataclasses.replace(entry, replayed=False)
 
     # -- the memoized evaluation --------------------------------------------
 
@@ -202,43 +255,62 @@ class EvalCache:
     def _append_persistent(self, key: tuple, result: EvalResult) -> None:
         # caller holds self._persist_lock; one write() call per entry keeps
         # lines whole even when several processes append to the same file
-        rec = {
-            "salt": code_version_salt(),
-            "key": list(key),
-            "passed": bool(result.passed),
-            "max_err": float(result.max_err),
-            "validated": bool(result.validated),
-            "profile": dataclasses.asdict(result.profile),
-        }
+        rec = dict(salt=code_version_salt(), key=list(key),
+                   **encode_result(result))
         os.makedirs(os.path.dirname(self.persist_path) or ".", exist_ok=True)
+        if self._truncate_at is not None:
+            # first flush after loading a torn file: cut the file back to
+            # its valid prefix so the garbage tail never accumulates
+            with open(self.persist_path, "r+") as f:
+                f.truncate(self._truncate_at)
+            self._truncate_at = None
         with open(self.persist_path, "a") as f:
             f.write(json.dumps(rec, default=_jsonable) + "\n")
 
     def _load_persistent(self) -> None:
         if not os.path.exists(self.persist_path):
             return
-        from repro.core.agents import Profile
         salt = code_version_salt()
-        with open(self.persist_path) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = json.loads(line)
-                    if rec.get("salt") != salt:
-                        continue        # stale code version
-                    result = EvalResult(
-                        bool(rec["passed"]), float(rec["max_err"]),
-                        Profile(**rec["profile"]),
-                        validated=bool(rec["validated"]))
-                except (KeyError, TypeError, ValueError):
-                    continue            # torn/foreign line: ignore
-                # later lines win (an upgrade appends a second record)
+        with open(self.persist_path, "rb") as f:
+            raw = f.read()
+        lines = raw.split(b"\n")
+        # a well-formed file ends with "\n": the final split element is
+        # empty. Anything else is a torn trailing write.
+        offset = 0
+        for i, bline in enumerate(lines):
+            is_last = i == len(lines) - 1
+            if is_last and bline == b"":
+                break                   # clean EOF
+            line = bline.decode("utf-8", errors="replace").strip()
+            if not line and not is_last:
+                offset += len(bline) + 1
+                continue
+            try:
+                rec = json.loads(line)
+                result = decode_result(rec)
                 key = tuple(rec["key"])
-                if key not in self._store:
-                    self.preloaded += 1
-                self._store[key] = result
+            except (KeyError, TypeError, ValueError):
+                if is_last:
+                    # the kill -9 artifact: keep the valid prefix, schedule
+                    # a physical truncation for the next flush
+                    warnings.warn(
+                        f"evalcache {self.persist_path}: truncated/corrupt "
+                        f"trailing line ({len(bline)} bytes) skipped; file "
+                        "will be truncated on next flush")
+                    self._truncate_at = offset
+                else:
+                    warnings.warn(
+                        f"evalcache {self.persist_path}: skipping corrupt "
+                        f"line {i + 1}")
+                    offset += len(bline) + 1
+                continue
+            offset += len(bline) + 1
+            if rec.get("salt") != salt:
+                continue                # stale code version
+            # later lines win (an upgrade appends a second record)
+            if key not in self._store:
+                self.preloaded += 1
+            self._store[key] = result
 
     # -- introspection ------------------------------------------------------
 

@@ -36,6 +36,17 @@ the shared ``EvalCache`` guarantee each unique genome is validated/profiled
 at most once even under races, and best-latency bookkeeping is replayed in
 input order after the batch.
 
+``evaluate_many(..., isolation="process", pool=...)`` runs the expensive
+tier-1/2 work (profile + oracle + interpret-mode validation) in sandboxed
+spawn-mode worker processes (``workers.EvalWorkerPool``): a candidate that
+hangs, segfaults, or OOMs kills its *worker*, never the search. Infra
+faults are retried with backoff; a genome that faults repeatedly is
+**quarantined** — recorded in the cache as ``finish_reason="crashed"``
+(``passed=False``) and never re-run. Batch-frozen thresholds are shipped
+to the workers, so for well-behaved genomes the results are bit-identical
+to the thread path. ``evaluate_many`` never raises on infra faults; the
+verdict carries them.
+
 ``TieredEvaluator(screen=False, smoke=False, share_oracle=False)`` is the
 reference configuration: it reproduces the sequential per-genome pipeline
 exactly (same verdicts, same ``max_err``, same oracle cost) while still
@@ -66,6 +77,14 @@ class EvalStats:
     screened_infeasible: int = 0    # genomes rejected by the cost model
     screened_dominated: int = 0     # genomes rejected as clearly dominated
     profile_runs: int = 0           # cost-model profiles computed
+    # -- process-isolation infra counters (zero on the thread path) --------
+    worker_crashes: int = 0         # worker process died mid-task
+    eval_timeouts: int = 0          # per-task deadline expired (worker shot)
+    corrupt_results: int = 0        # result checksum mismatches
+    retries: int = 0                # task re-dispatches after infra faults
+    recoveries: int = 0             # tasks that succeeded after >=1 fault
+    quarantined: int = 0            # genomes written off as crashed
+    workers_recycled: int = 0       # planned worker restarts (task budget)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -124,13 +143,14 @@ class TieredEvaluator:
                     result = EvalResult(True, 0.0, profile, validated=False)
                 cache.put(k, result)
         if _frozen is _UNSET:
-            self._note_best((space.name, sd), result)
+            self._note_delivery((space.name, sd), result, key=k, cache=cache)
         return result
 
     def evaluate_many(self, space, variants, tests, *, testing, profiling,
                       cache, validate: bool = True,
                       tests_digest: str | None = None,
-                      workers: int = 1) -> list[EvalResult]:
+                      workers: int = 1, isolation: str = "thread",
+                      pool=None) -> list[EvalResult]:
         """Evaluate a batch of genomes, concurrently when ``workers > 1``.
 
         Deterministic: screening thresholds and smoke ordering are frozen
@@ -138,7 +158,15 @@ class TieredEvaluator:
         order), and the best-latency bookkeeping is replayed in input order
         afterwards. Duplicate genomes in the batch collapse to one
         computation via the cache's per-key locks.
+
+        ``isolation="process"`` dispatches each genome to ``pool`` (an
+        ``EvalWorkerPool``) instead of validating in-process; infra faults
+        never raise — they surface as ``finish_reason="crashed"`` verdicts.
         """
+        if isolation not in ("thread", "process"):
+            raise ValueError(f"unknown isolation mode {isolation!r}")
+        if isolation == "process" and pool is None:
+            raise ValueError("isolation='process' requires an EvalWorkerPool")
         if not variants:
             return []
         sd = tests_digest if tests_digest is not None else suite_digest(tests)
@@ -147,21 +175,92 @@ class TieredEvaluator:
             frozen = (self._best_lat.get(skey),
                       dict(self._fail_counts.get(skey, ())))
 
-        def one(variant):
-            return self.evaluate(space, variant, tests, testing=testing,
-                                 profiling=profiling, cache=cache,
-                                 validate=validate, tests_digest=sd,
-                                 _frozen=frozen)
+        if isolation == "process":
+            def one(variant):
+                return self._evaluate_process(
+                    space, variant, tests, testing=testing,
+                    profiling=profiling, cache=cache, validate=validate,
+                    sd=sd, frozen=frozen, pool=pool)
+        else:
+            def one(variant):
+                return self.evaluate(space, variant, tests, testing=testing,
+                                     profiling=profiling, cache=cache,
+                                     validate=validate, tests_digest=sd,
+                                     _frozen=frozen)
 
         if workers > 1 and len(variants) > 1:
             with ThreadPoolExecutor(
-                    max_workers=min(workers, len(variants))) as pool:
-                results = list(pool.map(one, variants))
+                    max_workers=min(workers, len(variants))) as tpool:
+                results = list(tpool.map(one, variants))
         else:
             results = [one(v) for v in variants]
-        for result in results:              # deterministic merge order
-            self._note_best(skey, result)
+        for variant, result in zip(variants, results):  # deterministic order
+            k = cache.key(space.name, variant, tests, tests_digest=sd)
+            self._note_delivery(skey, result, key=k, cache=cache)
         return results
+
+    # -- process isolation ---------------------------------------------------
+
+    def _evaluate_process(self, space, variant, tests, *, testing, profiling,
+                          cache, validate, sd, frozen, pool) -> EvalResult:
+        """One genome through the sandboxed worker pool. Cache semantics
+        match ``evaluate``; the expensive work happens in a spawned child.
+        Never raises on infra faults — repeated faults become a quarantine
+        verdict (``finish_reason="crashed"``) recorded in the cache."""
+        k = cache.key(space.name, variant, tests, tests_digest=sd)
+        with cache.key_lock(k):
+            result = cache.try_hit(k, validate=validate)
+            if result is None:
+                cache.count_miss()
+                prior = cache.get(k)
+                task = {
+                    "kernel": space.name,
+                    "suite_shapes": space.suite_shapes,
+                    "variant": variant,
+                    "testing": testing,
+                    "profiling": profiling,
+                    "validate": validate,
+                    "tests_digest": sd,
+                    "frozen": None if frozen is _UNSET else frozen,
+                    "config": {"screen": self.screen, "smoke": self.smoke,
+                               "share_oracle": self.share_oracle,
+                               "dominate_factor": self.dominate_factor},
+                }
+                outcome = pool.submit(task, digest=k[1])
+                if outcome.ok:
+                    result, deltas = outcome.result, outcome.stats
+                    with self._lock:
+                        for name in ("oracle_computations",
+                                     "validation_test_runs",
+                                     "validations_full",
+                                     "validations_smoke_failed",
+                                     "screened_infeasible",
+                                     "screened_dominated",
+                                     "profile_runs"):
+                            setattr(self.stats, name,
+                                    getattr(self.stats, name)
+                                    + int(deltas.get(name, 0)))
+                    if prior is None and not result.screened:
+                        cache.note_profile_run(k)
+                    if result.validated:
+                        cache.note_validate_run(k)
+                    cache.put(k, result)
+                else:
+                    # quarantined: the genome repeatedly killed its worker.
+                    # The analytic profile is safe to compute in-parent (it
+                    # never executes candidate code), so the Log still gets
+                    # a latency estimate for the row.
+                    profile = prior.profile if prior is not None \
+                        else profiling.profile(space, variant, tests)
+                    result = EvalResult(False, 0.0, profile, validated=False,
+                                        finish_reason="crashed",
+                                        error=outcome.error)
+                    with self._lock:
+                        self.stats.quarantined += 1
+                    cache.put(k, result)     # persists: never re-run
+        if frozen is _UNSET:
+            self._note_delivery((space.name, sd), result, key=k, cache=cache)
+        return result
 
     # -- the cascade ---------------------------------------------------------
 
@@ -173,7 +272,7 @@ class TieredEvaluator:
                 with self._lock:
                     self.stats.screened_infeasible += 1
                 return EvalResult(False, 0.0, profile, validated=False,
-                                  screened=True)
+                                  screened=True, finish_reason="screened")
             if frozen is _UNSET:
                 with self._lock:
                     best = self._best_lat.get(skey)
@@ -184,12 +283,12 @@ class TieredEvaluator:
                 with self._lock:
                     self.stats.screened_dominated += 1
                 return EvalResult(False, 0.0, profile, validated=False,
-                                  screened=True)
+                                  screened=True, finish_reason="screened")
 
         oracle = self._oracle(space, tests, sd)
         order = self._order(skey, profile, len(tests), frozen)
         cache.note_validate_run(key)
-        worst, passed, ran = 0.0, True, 0
+        worst, passed, ran, failed_test = 0.0, True, 0, -1
         for i in order:
             ok, err = testing.validate(space, variant, [tests[i]],
                                        oracle=[oracle[i]])
@@ -199,15 +298,19 @@ class TieredEvaluator:
                 self.stats.validation_test_runs += 1
             if not ok:
                 passed = False
-                with self._lock:
-                    self._fail_counts.setdefault(skey, Counter())[i] += 1
+                failed_test = i
                 break
         with self._lock:
             if not passed and ran == 1 and self.smoke and len(tests) > 1:
                 self.stats.validations_smoke_failed += 1
             else:
                 self.stats.validations_full += 1
-        return EvalResult(passed, worst, profile, validated=True)
+        # The failure is recorded in the result, not bumped here: the
+        # smoke-ordering statistic is applied at *delivery* time
+        # (``_note_delivery``), which is what lets a journal replay
+        # reconstruct it without re-running the genome.
+        return EvalResult(passed, worst, profile, validated=True,
+                          failed_test=failed_test)
 
     def _oracle(self, space, tests, sd):
         """Oracle outputs aligned with ``tests`` — memoized per (kernel,
@@ -244,6 +347,21 @@ class TieredEvaluator:
         smoke = min(range(n), key=lambda i: (-fails.get(i, 0), lat[i], i))
         return [smoke] + [i for i in range(n) if i != smoke]
 
+    def _note_delivery(self, skey, result: EvalResult, *, key=None,
+                       cache=None) -> None:
+        """Apply per-delivery bookkeeping in deterministic order: the
+        smoke-ordering failure statistic (once per computed-or-replayed
+        result — cache hits must not double-count) and the best-latency
+        watermark. Journal-replayed entries count exactly once: the
+        ``replayed`` flag is cleared after its first delivery."""
+        if result.failed_test >= 0 and (not result.cached or result.replayed):
+            with self._lock:
+                self._fail_counts.setdefault(
+                    skey, Counter())[result.failed_test] += 1
+        if result.replayed and cache is not None and key is not None:
+            cache.clear_replayed(key)
+        self._note_best(skey, result)
+
     def _note_best(self, skey, result: EvalResult) -> None:
         if not (result.validated and result.passed):
             return
@@ -252,6 +370,13 @@ class TieredEvaluator:
             cur = self._best_lat.get(skey)
             if cur is None or lat < cur:
                 self._best_lat[skey] = lat
+
+    def bump(self, name: str, n: int = 1) -> None:
+        """Thread-safe increment of one ``EvalStats`` counter — the hook an
+        ``EvalWorkerPool`` uses to report infra events (crashes, timeouts,
+        retries, recoveries, recycles) back to the evaluator that owns it."""
+        with self._lock:
+            setattr(self.stats, name, getattr(self.stats, name) + n)
 
     def stats_dict(self) -> dict:
         with self._lock:

@@ -9,19 +9,44 @@ Algorithm-1 semantics), ``"beam"``, ``"population"``, or any
 the engine evaluates concurrently. Cache hit counts, per-search wall-clock,
 and cascade stage counters are surfaced in the returned ``Log.meta`` and
 in the verbose search log.
+
+Robustness additions (see README § "Robust search"):
+
+  * ``isolation="process"`` evaluates candidates in sandboxed spawn
+    workers (``search/workers.EvalWorkerPool``, created lazily and closed
+    by ``close()``) — a hung or crashing candidate costs a worker, never
+    the search, and repeat offenders are quarantined.
+  * ``search(..., journal=SearchJournal(path))`` makes the search
+    resumable: journaled outcomes are seeded into the cache as replayed
+    entries and the (deterministic) strategy fast-forwards through them.
+  * ``optimize_all(keep_going=True)`` converts one kernel's infra failure
+    into a ``SearchFailure`` record instead of aborting the whole bench.
 """
 
 from __future__ import annotations
 
 import time
+import traceback
 
 from repro.core.agents import (CodingAgent, PlanningAgent, ProfilingAgent,
                                TestingAgent)
 from repro.core.oplog import Log
 from repro.kernels.registry import KernelSpace, get_space, suite_tests
-from repro.search.cache import EvalCache
+from repro.search.cache import EvalCache, decode_result
 from repro.search.evaluator import TieredEvaluator
 from repro.search.strategies import SearchContext, resolve_strategy
+
+
+class SearchFailure(RuntimeError):
+    """One kernel's search died of an infrastructure error. Carries the
+    kernel name so keep-going callers can mark it failed and move on."""
+
+    def __init__(self, kernel: str, cause: BaseException):
+        super().__init__(f"search for {kernel!r} failed: {cause!r}")
+        self.kernel = kernel
+        self.cause = cause
+        self.detail = "".join(traceback.format_exception_only(
+            type(cause), cause)).strip()
 
 
 class SearchOrchestrator:
@@ -34,7 +59,12 @@ class SearchOrchestrator:
                  coding: CodingAgent | None = None,
                  cache: EvalCache | None = None,
                  evaluator: TieredEvaluator | None = None,
-                 workers: int = 4):
+                 workers: int = 4,
+                 isolation: str = "thread",
+                 pool=None,
+                 pool_config: dict | None = None):
+        if isolation not in ("thread", "process"):
+            raise ValueError(f"unknown isolation mode {isolation!r}")
         self.testing = testing if testing is not None else TestingAgent()
         self.profiling = profiling if profiling is not None \
             else ProfilingAgent(reps=100)
@@ -46,21 +76,75 @@ class SearchOrchestrator:
         self.evaluator = evaluator if evaluator is not None \
             else TieredEvaluator()
         self.workers = max(1, workers)
+        self.isolation = isolation
+        self._pool = pool               # caller-owned when passed in
+        self._owns_pool = pool is None
+        self._pool_config = dict(pool_config or {})
+
+    def _ensure_pool(self):
+        """Lazily spawn the worker pool on first process-isolated search
+        (spawn-mode workers cost ~1s each to start)."""
+        if self._pool is None:
+            from repro.search.workers import EvalWorkerPool
+            cfg = dict(self._pool_config)
+            cfg.setdefault("workers", self.workers)
+            self._pool = EvalWorkerPool(on_stat=self.evaluator.bump, **cfg)
+        return self._pool
+
+    def close(self) -> None:
+        """Release the worker pool (no-op for thread isolation or a
+        caller-owned pool)."""
+        if self._owns_pool and self._pool is not None:
+            self._pool.close()
+            self._pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     def search(self, kernel: str | KernelSpace, *, strategy="greedy",
-               rounds: int = 5, verbose: bool = False) -> Log:
+               rounds: int = 5, verbose: bool = False, journal=None) -> Log:
         space = get_space(kernel) if isinstance(kernel, str) else kernel
         strat = resolve_strategy(strategy)
         tests = suite_tests(space, self.testing)
+        pool = self._ensure_pool() if self.isolation == "process" else None
         ctx = SearchContext(space=space, testing=self.testing,
                             profiling=self.profiling, planning=self.planning,
                             coding=self.coding, tests=tests,
                             cache=self.cache, rounds=rounds, verbose=verbose,
-                            evaluator=self.evaluator, workers=self.workers)
+                            evaluator=self.evaluator, workers=self.workers,
+                            isolation=self.isolation, pool=pool,
+                            journal=journal)
+        resumed, replayed = False, 0
+        if journal is not None:
+            from repro.search.cache import code_version_salt
+            config = {k: v for k, v in vars(strat).items()
+                      if isinstance(v, (bool, int, float, str))}
+            resumed = journal.open(
+                kernel=space.name, strategy=strat.name,
+                strategy_config=config, rounds=rounds,
+                tests_digest=ctx.tests_digest, salt=code_version_salt())
+            # seed journaled outcomes as replayed cache entries; existing
+            # entries (e.g. from the persistent evalcache) take precedence
+            # so both this run and an uninterrupted one see the same state
+            for key, rec in journal.replay.items():
+                if self.cache.get(key) is None:
+                    self.cache.put(key, decode_result(rec, replayed=True),
+                                   persist=False)
+                    replayed += 1
         before = self.cache.stats()
         ebefore = self.evaluator.stats_dict()
         t0 = time.perf_counter()
-        log = strat.run(ctx)
+        try:
+            log = strat.run(ctx)
+            if journal is not None:
+                journal.finish(log)
+        finally:
+            if journal is not None:
+                journal.close()
         wall = time.perf_counter() - t0
         after = self.cache.stats()
         eafter = self.evaluator.stats_dict()
@@ -77,7 +161,12 @@ class SearchOrchestrator:
                 "max_evals_per_genome": after["max_evals_per_genome"],
             },
             stages={k: eafter[k] - ebefore[k] for k in eafter},
+            isolation=self.isolation,
         )
+        if journal is not None:
+            log.meta.update(journal={"path": journal.path,
+                                     "resumed": resumed,
+                                     "replayed": replayed})
         if verbose:
             c, s = log.meta["cache"], log.meta["stages"]
             print(f"[{space.name}] {strat.name}: {len(log.entries)} log "
@@ -98,6 +187,9 @@ def optimize(kernel: str | KernelSpace, *, rounds: int = 5,
              cache: EvalCache | None = None,
              evaluator: TieredEvaluator | None = None,
              workers: int = 4,
+             isolation: str = "thread",
+             pool_config: dict | None = None,
+             journal=None,
              verbose: bool = False) -> Log:
     """Run one search on one kernel. Returns the optimization Log.
 
@@ -107,9 +199,11 @@ def optimize(kernel: str | KernelSpace, *, rounds: int = 5,
     """
     orch = SearchOrchestrator(testing=testing, profiling=profiling,
                               planning=planning, coding=coding, cache=cache,
-                              evaluator=evaluator, workers=workers)
-    return orch.search(kernel, strategy=strategy, rounds=rounds,
-                       verbose=verbose)
+                              evaluator=evaluator, workers=workers,
+                              isolation=isolation, pool_config=pool_config)
+    with orch:
+        return orch.search(kernel, strategy=strategy, rounds=rounds,
+                           verbose=verbose, journal=journal)
 
 
 def optimize_all(*, rounds: int = 5, strategy="greedy",
@@ -118,13 +212,35 @@ def optimize_all(*, rounds: int = 5, strategy="greedy",
                                              "fused_add_rmsnorm",
                                              "silu_and_mul"),
                  cache: EvalCache | None = None,
-                 workers: int = 4) -> dict[str, Log]:
+                 workers: int = 4,
+                 isolation: str = "thread",
+                 pool_config: dict | None = None,
+                 journals: dict | None = None,
+                 keep_going: bool = False) -> dict[str, Log]:
     """Optimize the paper's kernels; returns {kernel: Log}. One orchestrator
-    (one evaluation cache, one tiered evaluator) is shared across all
-    searches."""
-    orch = SearchOrchestrator(cache=cache, workers=workers)
-    return {k: orch.search(k, strategy=strategy, rounds=rounds,
-                           verbose=verbose) for k in kernels}
+    (one evaluation cache, one tiered evaluator, one worker pool) is shared
+    across all searches.
+
+    ``keep_going=True``: a kernel whose search dies of an infrastructure
+    error maps to a ``SearchFailure`` instead of a ``Log`` — the remaining
+    kernels still run, and the caller decides how to report the casualty
+    (``benchmarks/run.py`` marks it ``failed`` in bench.json).
+    ``journals`` optionally maps kernel name -> ``SearchJournal``.
+    """
+    results: dict[str, Log] = {}
+    with SearchOrchestrator(cache=cache, workers=workers,
+                            isolation=isolation,
+                            pool_config=pool_config) as orch:
+        for k in kernels:
+            journal = (journals or {}).get(k)
+            try:
+                results[k] = orch.search(k, strategy=strategy, rounds=rounds,
+                                         verbose=verbose, journal=journal)
+            except Exception as exc:    # noqa: BLE001 — keep-going boundary
+                if not keep_going:
+                    raise
+                results[k] = SearchFailure(k, exc)
+    return results
 
 
 def reintegrate(results: dict[str, Log]) -> None:

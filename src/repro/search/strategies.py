@@ -49,6 +49,9 @@ class SearchContext:
     tests_digest: str = ""
     evaluator: Any = None           # TieredEvaluator; None = legacy path
     workers: int = 1                # evaluate_many concurrency
+    isolation: str = "thread"       # "process": sandboxed eval workers
+    pool: Any = None                # workers.EvalWorkerPool (process mode)
+    journal: Any = None             # journal.SearchJournal; None = off
 
     def __post_init__(self) -> None:
         if not self.tests_digest:
@@ -62,15 +65,22 @@ class SearchContext:
 
     def evaluate(self, variant, *, validate: bool = True) -> EvalResult:
         if self.evaluator is not None:
-            return self.evaluator.evaluate(
+            if self.isolation == "process":
+                # single-candidate strategies still get sandboxing: route
+                # through the batch API, which owns the process path
+                return self.evaluate_many([variant], validate=validate)[0]
+            result = self.evaluator.evaluate(
                 self.space, variant, self.tests,
                 testing=self.testing, profiling=self.profiling,
                 cache=self.cache, validate=validate,
                 tests_digest=self.tests_digest)
-        return self.cache.evaluate(
-            self.space, variant, self.tests,
-            testing=self.testing, profiling=self.profiling,
-            validate=validate, tests_digest=self.tests_digest)
+        else:
+            result = self.cache.evaluate(
+                self.space, variant, self.tests,
+                testing=self.testing, profiling=self.profiling,
+                validate=validate, tests_digest=self.tests_digest)
+        self._journal_results([variant], [result])
+        return result
 
     def evaluate_many(self, variants, *,
                       validate: bool = True) -> list[EvalResult]:
@@ -79,11 +89,31 @@ class SearchContext:
         Results align with ``variants``; duplicates collapse in the cache."""
         if self.evaluator is None:
             return [self.evaluate(v, validate=validate) for v in variants]
-        return self.evaluator.evaluate_many(
+        results = self.evaluator.evaluate_many(
             self.space, variants, self.tests,
             testing=self.testing, profiling=self.profiling, cache=self.cache,
             validate=validate, tests_digest=self.tests_digest,
-            workers=self.workers)
+            workers=self.workers, isolation=self.isolation, pool=self.pool)
+        self._journal_results(variants, results)
+        return results
+
+    def note_round(self, round_: int, variants) -> None:
+        """Write-ahead: journal a round's candidate set before its
+        evaluations (also the resume determinism self-check)."""
+        if self.journal is not None:
+            self.journal.record_round(
+                round_, [genome_digest(v) for v in variants])
+
+    def _journal_results(self, variants, results) -> None:
+        # only freshly computed outcomes: cache hits (including journal
+        # replays, which arrive as hits) are already durable
+        if self.journal is None:
+            return
+        for variant, result in zip(variants, results):
+            if not result.cached:
+                self.journal.record_eval(
+                    self.cache.key(self.space.name, variant,
+                                   tests_digest=self.tests_digest), result)
 
     def history_entry(self, variant, result: EvalResult,
                       suggestion=None) -> dict:
@@ -109,6 +139,7 @@ class GreedyChain(SearchStrategy):
     def run(self, ctx: SearchContext) -> Log:
         space = ctx.space
         s_prev = space.baseline
+        ctx.note_round(0, [s_prev])
         base = ctx.evaluate(s_prev, validate=False)
         log = Log()
         log.append(LogEntry(0, s_prev, True, base.profile,
@@ -120,6 +151,7 @@ class GreedyChain(SearchStrategy):
             sugg = ctx.planning.suggest(space, s_prev, pass_prev, perf_prev,
                                         history)
             s_new = ctx.coding.apply(space, s_prev, sugg)
+            ctx.note_round(r, [s_new])
             res = ctx.evaluate(s_new)
             log.append(LogEntry(r, s_new, res.passed, res.profile,
                                 rationale=sugg.rationale,
@@ -150,6 +182,7 @@ class BeamSearch(SearchStrategy):
 
     def run(self, ctx: SearchContext) -> Log:
         space = ctx.space
+        ctx.note_round(0, [space.baseline])
         base = ctx.evaluate(space.baseline, validate=False)
         log = Log()
         log.append(LogEntry(0, space.baseline, True, base.profile,
@@ -176,6 +209,7 @@ class BeamSearch(SearchStrategy):
             # Phase 2: evaluate the round's novel genomes as one concurrent
             # batch; results come back in proposal order, so the Log is
             # identical to the old one-at-a-time loop.
+            ctx.note_round(r, [c for c, _, _ in batch])
             results = ctx.evaluate_many([c for c, _, _ in batch])
             children = []
             for (child, sugg, hist), cres in zip(batch, results):
@@ -244,6 +278,7 @@ class Population(SearchStrategy):
     def run(self, ctx: SearchContext) -> Log:
         space = ctx.space
         rng = random.Random(self.seed)
+        ctx.note_round(0, [space.baseline])
         base = ctx.evaluate(space.baseline, validate=False)
         log = Log()
         log.append(LogEntry(0, space.baseline, True, base.profile,
@@ -262,6 +297,7 @@ class Population(SearchStrategy):
                 seen.add(dg)
                 novel.append(genome)
             # one concurrent batch per generation; results in genome order
+            ctx.note_round(gen, novel)
             for genome, res in zip(novel, ctx.evaluate_many(novel)):
                 log.append(LogEntry(gen, genome, res.passed, res.profile,
                                     rationale=f"population gen {gen}",

@@ -71,7 +71,29 @@ class EvalResult:
     # validation never ran, so ``validated`` is False and ``passed`` is a
     # screening verdict, not a correctness verdict.
     screened: bool = False
+    # How the evaluation ended — mirroring the serving layer's per-request
+    # lifecycle. "ok": the pipeline ran to a verdict. "screened": rejected
+    # by the cost model alone. "crashed": the genome was quarantined after
+    # repeatedly crashing/hanging its isolation worker; ``passed`` is False
+    # and ``error`` carries the infra detail. Crashed verdicts are final:
+    # the cache serves them forever and the genome is never re-run.
+    finish_reason: str = "ok"
+    error: str | None = None        # infra detail for crashed genomes
+    # Suite index of the test that failed validation (-1: none failed).
+    # Recorded so a resumed search can reconstruct the evaluator's
+    # smoke-ordering failure statistics exactly.
+    failed_test: int = -1
+    # True: this entry was replayed from a search journal during --resume.
+    # Its failure statistics must be re-applied once on delivery (a normal
+    # cache hit must not double-count them). Never persisted.
+    replayed: bool = False
 
     @property
     def latency_us(self) -> float:
         return self.profile.geomean_latency_us
+
+    @property
+    def failed_infra(self) -> bool:
+        """True when the verdict reflects infrastructure failure (worker
+        crash/timeout quarantine), not a correctness check."""
+        return self.finish_reason == "crashed"

@@ -1,0 +1,78 @@
+"""Subprocess driver for the kill -9 resume acceptance test.
+
+Runs one journaled search on a reduced fused_add_rmsnorm suite and dumps
+an exact Log fingerprint to ``--out``. With ``--kill-after-evals N`` the
+process SIGKILLs *itself* immediately after the N-th evaluation record
+hits the journal — a real ``kill -9`` at a deterministic journal
+position, not a monkeypatched exception. A second invocation against the
+same journal path is the ``--resume`` flow: it replays the journal and
+must produce a fingerprint bit-identical to an uninterrupted run.
+
+Named ``driver_*`` (not ``test_*``) so pytest never collects it; it is
+only ever launched by ``tests/test_search_chaos.py``.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import signal
+
+import jax.numpy as jnp
+
+from repro.core.agents import ProfilingAgent, TestingAgent
+from repro.kernels.registry import get_space
+from repro.search import EvalCache, SearchJournal, SearchOrchestrator
+from repro.search.cache import _jsonable
+
+SMALL = ({"batch": 16, "hidden": 512}, {"batch": 8, "hidden": 512})
+
+
+def fingerprint(log):
+    """Exact (unrounded) per-entry payload — stricter than LogEntry.row."""
+    return [{"round": e.round, "variant": e.code.describe(),
+             "correct": bool(e.correct), "rationale": e.rationale,
+             "max_err": float(e.max_err),
+             "profile": dataclasses.asdict(e.perf)} for e in log.entries]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--journal", required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--strategy", default="greedy")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--kill-after-evals", type=int, default=0)
+    args = ap.parse_args()
+
+    journal = SearchJournal(args.journal)
+    if args.kill_after_evals:
+        orig = journal.record_eval
+        written = {"n": 0}
+
+        def record_and_maybe_die(key, result):
+            orig(key, result)
+            written["n"] += 1
+            if written["n"] >= args.kill_after_evals:
+                os.kill(os.getpid(), signal.SIGKILL)
+
+        journal.record_eval = record_and_maybe_die
+
+    space = dataclasses.replace(get_space("fused_add_rmsnorm"),
+                                suite_shapes=SMALL)
+    orch = SearchOrchestrator(
+        testing=TestingAgent(dtypes=(jnp.float32,), seed=0),
+        profiling=ProfilingAgent(reps=100),
+        cache=EvalCache(), workers=args.workers)
+    log = orch.search(space, strategy=args.strategy, rounds=args.rounds,
+                      journal=journal)
+    with open(args.out, "w") as f:
+        json.dump({"rows": fingerprint(log),
+                   "resumed": log.meta["journal"]["resumed"],
+                   "replayed": log.meta["journal"]["replayed"]},
+                  f, default=_jsonable)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,420 @@
+"""Crash-isolated search acceptance: sandboxed workers, chaos drills, and
+kill -9 resume via the write-ahead journal.
+
+The acceptance criteria of the robustness PR:
+
+  * process isolation is bit-identical to the thread path for
+    well-behaved genomes;
+  * a chaos run (worker kill + over-deadline hang + corrupted result)
+    completes in bounded wall-clock, quarantines only the faulting
+    genome, and yields the same best genome as the undisturbed search;
+  * ``kill -9`` mid-search followed by resume produces a bit-identical
+    ``Log`` — proven both in-process (seeded random journal truncation,
+    greedy and beam with workers>1) and with a real SIGKILLed subprocess
+    (``tests/driver_search_journal.py``).
+
+Process-isolation tests run on reduced float32 fused_add_rmsnorm suites
+(spawn workers pay a JAX import per process — keep the genome count low).
+"""
+
+import dataclasses
+import json
+import os
+import random
+import signal
+import subprocess
+import sys
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.agents import Profile, ProfilingAgent, TestingAgent
+from repro.core.oplog import Log
+from repro.kernels.registry import get_space
+from repro.reliability import EvalTimeout, Fault, SearchChaosInjector
+from repro.search import (EvalCache, EvalWorkerPool, JournalMismatch,
+                          SearchFailure, SearchJournal, SearchOrchestrator,
+                          TieredEvaluator, genome_digest, optimize_all,
+                          suite_digest)
+
+SMALL = ({"batch": 16, "hidden": 512}, {"batch": 8, "hidden": 512})
+TINY = ({"batch": 16, "hidden": 512},)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRIVER = os.path.join(REPO, "tests", "driver_search_journal.py")
+
+
+def small_space(shapes=SMALL):
+    return dataclasses.replace(get_space("fused_add_rmsnorm"),
+                               suite_shapes=shapes)
+
+
+def roster():
+    return dict(testing=TestingAgent(dtypes=(jnp.float32,), seed=0),
+                profiling=ProfilingAgent(reps=100))
+
+
+def fingerprint(log):
+    """Exact (unrounded) per-entry payload — stricter than LogEntry.row."""
+    return [{"round": e.round, "variant": e.code.describe(),
+             "correct": bool(e.correct), "rationale": e.rationale,
+             "max_err": float(e.max_err),
+             "profile": dataclasses.asdict(e.perf)} for e in log.entries]
+
+
+def result_fields(r):
+    return (r.passed, r.max_err, r.validated, r.screened, r.finish_reason,
+            r.failed_test, dataclasses.asdict(r.profile))
+
+
+# -- process isolation ------------------------------------------------------
+
+def test_process_isolation_bit_identical():
+    """Well-behaved genomes: sandboxed evaluation returns exactly what the
+    thread path returns (frozen thresholds shipped to the worker)."""
+    space = small_space()
+    ags = roster()
+    tests = ags["testing"].generate_tests(space)
+    sd = suite_digest(tests)
+    base = space.baseline
+    variants = [base,
+                dataclasses.replace(base, block_rows=base.block_rows * 2),
+                dataclasses.replace(base, use_rsqrt=True)]
+
+    ev_t = TieredEvaluator()
+    res_t = ev_t.evaluate_many(space, variants, tests, cache=EvalCache(),
+                               tests_digest=sd, **ags)
+    ev_p = TieredEvaluator()
+    with EvalWorkerPool(workers=1, deadline_s=120.0,
+                        on_stat=ev_p.bump) as pool:
+        res_p = ev_p.evaluate_many(space, variants, tests, cache=EvalCache(),
+                                   tests_digest=sd, isolation="process",
+                                   pool=pool, **ags)
+    assert [result_fields(r) for r in res_t] \
+        == [result_fields(r) for r in res_p]
+    # and the evaluator's internal search state reconstructs identically
+    assert ev_t._best_lat == ev_p._best_lat
+    assert ev_t._fail_counts == ev_p._fail_counts
+    stats = ev_p.stats
+    assert (stats.worker_crashes, stats.eval_timeouts, stats.retries,
+            stats.quarantined) == (0, 0, 0, 0)
+
+
+def test_evaluate_many_rejects_bad_isolation():
+    ev = TieredEvaluator()
+    with pytest.raises(ValueError):
+        ev.evaluate_many(small_space(), [small_space().baseline], [],
+                         cache=EvalCache(), isolation="carrier-pigeon",
+                         **roster())
+    with pytest.raises(ValueError):
+        ev.evaluate_many(small_space(), [small_space().baseline], [],
+                         cache=EvalCache(), isolation="process", pool=None,
+                         **roster())
+
+
+def test_validate_timeout_budget():
+    """The cooperative deadline in TestingAgent.validate raises EvalTimeout
+    rather than burning the rest of the suite."""
+    space = small_space()
+    testing = TestingAgent(dtypes=(jnp.float32,), seed=0)
+    tests = testing.generate_tests(space)
+    with pytest.raises(EvalTimeout):
+        testing.validate(space, space.baseline, tests, timeout_s=0.0)
+    ok, _ = testing.validate(space, space.baseline, tests[:1],
+                             timeout_s=600.0)
+    assert ok
+
+
+def test_quarantine_is_final_and_persistent(tmp_path):
+    """A genome that repeatedly kills its worker is quarantined with a
+    crashed verdict, persisted, and never re-run — even by a new process
+    loading the same cache file."""
+    space = small_space(TINY)
+    ags = roster()
+    tests = ags["testing"].generate_tests(space)
+    sd = suite_digest(tests)
+    victim = dataclasses.replace(space.baseline, block_rows=32)
+    chaos = SearchChaosInjector(
+        [Fault("kill_worker", digest=genome_digest(victim), times=2)])
+    path = str(tmp_path / "cache.jsonl")
+
+    ev = TieredEvaluator()
+    cache = EvalCache(persist_path=path)
+    with EvalWorkerPool(workers=1, deadline_s=60.0, quarantine_after=2,
+                        chaos=chaos, on_stat=ev.bump) as pool:
+        ok_res, bad_res = ev.evaluate_many(
+            space, [space.baseline, victim], tests, cache=cache,
+            tests_digest=sd, isolation="process", pool=pool, **ags)
+    assert ok_res.passed and ok_res.finish_reason == "ok"
+    assert bad_res.finish_reason == "crashed" and bad_res.failed_infra
+    assert not bad_res.passed and not bad_res.validated
+    assert "worker died" in bad_res.error
+    assert ev.stats.quarantined == 1 and ev.stats.worker_crashes == 2
+    # the quarantine profile is the analytic cost model, computed in-parent
+    assert bad_res.profile.geomean_latency_us > 0
+
+    # a later process preloads the crashed verdict and never re-runs it:
+    # no pool exists here, so a cache miss would raise
+    cache2 = EvalCache(persist_path=path)
+    assert cache2.preloaded >= 2
+    ev2 = TieredEvaluator()
+    res2 = ev2.evaluate(space, victim, tests, cache=cache2,
+                        tests_digest=sd, **ags)
+    assert res2.cached and res2.failed_infra
+    assert cache2.stats()["hits"] == 1 and cache2.stats()["misses"] == 0
+
+
+# -- the chaos acceptance run -----------------------------------------------
+
+def test_search_chaos_acceptance():
+    """Worker kill + over-deadline hang + corrupted result injected into a
+    beam search: bounded wall-clock, only the deliberately-doomed genome
+    quarantined, same best genome as the undisturbed search."""
+    space = small_space(TINY)
+    undisturbed = SearchOrchestrator(
+        cache=EvalCache(), workers=2, **roster()).search(
+            space, strategy="beam", rounds=2)
+    ref_rows = fingerprint(undisturbed)
+    best = undisturbed.best().code
+    last_round = max(e.round for e in undisturbed.entries)
+    # quarantine target: a final-round genome that is not the best — its
+    # children were never explored, so killing it perturbs nothing else
+    targets = [e.code for e in undisturbed.entries
+               if e.round == last_round
+               and genome_digest(e.code) != genome_digest(best)]
+    assert targets, "beam search too small to pick a quarantine victim"
+    victim = targets[-1]
+    # recovery faults on three other genomes (fire once -> retry succeeds)
+    others = [e.code for e in undisturbed.entries
+              if genome_digest(e.code) != genome_digest(victim)]
+    chaos = SearchChaosInjector([
+        Fault("kill_worker", digest=genome_digest(others[0])),
+        Fault("hang_eval", digest=genome_digest(others[1 % len(others)]),
+              seconds=30.0),
+        Fault("corrupt_result",
+              digest=genome_digest(others[2 % len(others)])),
+        Fault("kill_worker", digest=genome_digest(victim), times=2),
+    ])
+
+    orch = SearchOrchestrator(
+        cache=EvalCache(), workers=2, isolation="process",
+        pool_config={"deadline_s": 8.0, "quarantine_after": 2,
+                     "chaos": chaos}, **roster())
+    t0 = time.monotonic()
+    with orch:
+        log = orch.search(space, strategy="beam", rounds=2)
+    wall = time.monotonic() - t0
+    # bounded: evals + one 8s deadline + retries/backoff, never the 30s hang
+    assert wall < 300.0, f"chaos search took {wall:.0f}s"
+
+    stats = log.meta["stages"]
+    assert stats["quarantined"] == 1, "quarantined more than the victim"
+    assert stats["recoveries"] == 3
+    assert chaos.exhausted
+    assert log.best().code == best, "chaos changed the best genome"
+    # every row except the victim's is bit-identical to the undisturbed run
+    rows = fingerprint(log)
+    assert len(rows) == len(ref_rows)
+    vdesc = victim.describe()
+    for got, want in zip(rows, ref_rows):
+        if want["variant"] == vdesc and want["round"] == last_round:
+            assert got["correct"] is False
+            assert got["profile"] == want["profile"]  # analytic, in-parent
+        else:
+            assert got == want
+
+
+# -- journal resume ---------------------------------------------------------
+
+def _journaled_search(path, *, strategy, rounds, workers=1):
+    orch = SearchOrchestrator(cache=EvalCache(), workers=workers, **roster())
+    return orch.search(small_space(), strategy=strategy, rounds=rounds,
+                       journal=SearchJournal(str(path)))
+
+
+@pytest.mark.parametrize("strategy,rounds,workers",
+                         [("greedy", 3, 1), ("beam", 2, 2)])
+def test_resume_from_random_truncation(tmp_path, strategy, rounds, workers):
+    """Property: kill the search at ANY journal position (seeded random
+    cuts + a torn trailing write), resume, and the Log is bit-identical
+    to the uninterrupted run."""
+    path = tmp_path / f"{strategy}.jsonl"
+    ref = fingerprint(_journaled_search(path, strategy=strategy,
+                                        rounds=rounds, workers=workers))
+    full = path.read_bytes().split(b"\n")
+    rng = random.Random(1234)
+    cuts = sorted(rng.sample(range(1, len(full) - 1), k=3))
+    for cut in cuts:
+        path.write_bytes(b"\n".join(full[:cut]) + b"\n"
+                         + b'{"type": "eval", "key": ["torn')
+        with pytest.warns(UserWarning, match="torn/corrupt tail"):
+            log = _journaled_search(path, strategy=strategy, rounds=rounds,
+                                    workers=workers)
+        assert fingerprint(log) == ref, f"divergence at cut {cut}"
+    # a finished journal resumes as pure replay: zero new evaluations
+    path.write_bytes(b"\n".join(full))
+    log = _journaled_search(path, strategy=strategy, rounds=rounds,
+                            workers=workers)
+    assert fingerprint(log) == ref
+    assert log.meta["journal"]["resumed"]
+    assert log.meta["cache"]["misses"] == 0
+
+
+def _run_driver(journal, out, *extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, DRIVER, "--journal", str(journal),
+         "--out", str(out), *extra],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=300)
+
+
+@pytest.mark.parametrize("strategy,rounds,workers,kill_after",
+                         [("greedy", 2, 1, 2), ("beam", 2, 2, 3)])
+def test_kill9_resume_bit_identical(tmp_path, strategy, rounds, workers,
+                                    kill_after):
+    """The real thing: SIGKILL the search process mid-run (right after the
+    N-th journal eval record), rerun with the same journal, and the final
+    Log is bit-identical to an uninterrupted run."""
+    args = ("--strategy", strategy, "--rounds", str(rounds),
+            "--workers", str(workers))
+    ref_out = tmp_path / "ref.json"
+    proc = _run_driver(tmp_path / "ref.jsonl", ref_out, *args)
+    assert proc.returncode == 0, proc.stderr
+    ref = json.loads(ref_out.read_text())
+    assert not ref["resumed"]
+
+    journal = tmp_path / "killed.jsonl"
+    proc = _run_driver(journal, tmp_path / "dead.json", *args,
+                       "--kill-after-evals", str(kill_after))
+    assert proc.returncode == -signal.SIGKILL, \
+        f"driver survived its own kill -9: rc={proc.returncode} " \
+        f"{proc.stderr}"
+    assert not (tmp_path / "dead.json").exists()
+    assert journal.exists() and journal.stat().st_size > 0
+
+    res_out = tmp_path / "resumed.json"
+    proc = _run_driver(journal, res_out, *args)
+    assert proc.returncode == 0, proc.stderr
+    resumed = json.loads(res_out.read_text())
+    assert resumed["resumed"] and resumed["replayed"] >= kill_after - 1
+    assert resumed["rows"] == ref["rows"]
+
+
+def test_journal_header_and_round_guards(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    header = dict(kernel="k", strategy="greedy", strategy_config={},
+                  rounds=2, tests_digest="d", salt="s")
+    j = SearchJournal(path)
+    assert j.open(**header) is False
+    j.record_round(1, ["aaaa"])
+    j.close()
+    # same search resumes; re-proposing different candidates is caught
+    j2 = SearchJournal(path)
+    j2.open(**header)
+    j2.record_round(1, ["aaaa"])        # identical replay: fine
+    with pytest.raises(JournalMismatch):
+        j2.record_round(1, ["bbbb"])
+    j2.close()
+    # a changed config is a different search: discarded, never replayed
+    j3 = SearchJournal(path)
+    with pytest.warns(UserWarning, match="header mismatch"):
+        resumed = j3.open(**dict(header, rounds=5))
+    assert resumed is False and j3.rounds == {}
+    j3.close()
+
+
+# -- satellite: cache torn-tail repair --------------------------------------
+
+def _toy_result(lat=1.0):
+    from repro.search.types import EvalResult
+    return EvalResult(True, 0.0, Profile([], lat, "memory", {}, 0.0))
+
+
+def test_cache_truncated_tail_skips_warns_and_repairs(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    c1 = EvalCache(persist_path=path)
+    c1.put(("k", "g1", "s"), _toy_result(1.0))
+    c1.put(("k", "g2", "s"), _toy_result(2.0))
+    with open(path, "ab") as f:         # the kill -9 artifact
+        f.write(b'{"salt": "xyz", "key": ["k", "g3"')
+    with pytest.warns(UserWarning, match="truncated/corrupt trailing line"):
+        c2 = EvalCache(persist_path=path)
+    assert c2.preloaded == 2            # valid prefix kept, tail skipped
+    # the next flush physically truncates the garbage tail: every line in
+    # the repaired file parses, and a third load is clean (no warning)
+    c2.put(("k", "g3", "s"), _toy_result(3.0))
+    with open(path, "rb") as f:
+        for line in f:
+            json.loads(line)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        c3 = EvalCache(persist_path=path)
+    assert c3.preloaded == 3
+
+
+# -- satellite: keep-going --------------------------------------------------
+
+def test_optimize_all_keep_going(monkeypatch):
+    """One kernel's infra failure becomes a SearchFailure record; the
+    remaining kernels still complete."""
+    from repro.search import orchestrator as orch_mod
+    real = orch_mod.get_space
+
+    def fake_get_space(kernel):
+        if kernel == "boom":
+            raise RuntimeError("kernel module exploded")
+        return dataclasses.replace(
+            real(kernel), suite_shapes=({"batch": 16, "hidden": 1024},))
+
+    monkeypatch.setattr(orch_mod, "get_space", fake_get_space)
+    results = optimize_all(kernels=("boom", "silu_and_mul"), rounds=1,
+                           workers=1, keep_going=True)
+    assert isinstance(results["boom"], SearchFailure)
+    assert results["boom"].kernel == "boom"
+    assert "exploded" in results["boom"].detail
+    assert isinstance(results["silu_and_mul"], Log)
+    assert results["silu_and_mul"].best().correct
+    # without keep_going the failure propagates (historical behavior)
+    with pytest.raises(RuntimeError):
+        optimize_all(kernels=("boom",), rounds=1, workers=1)
+
+
+def test_regression_gate_flags_failed_kernels_and_infra_counters():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_regression",
+        os.path.join(REPO, "benchmarks", "check_regression.py"))
+    cr = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cr)
+    bench = {
+        "kernels": [
+            {"kernel": "a", "speedup": 1.5, "correct": True,
+             "stages": {}},
+            {"kernel": "b", "failed": True, "error": "worker died"},
+        ],
+        "geomean_speedup": 1.5,
+        "stage_totals": {"quarantined": 2, "recoveries": 1},
+        "serving": [],
+    }
+    cur = cr.extract(bench)
+    assert cur["search_infra"] == {"quarantined": 2, "recoveries": 1,
+                                   "failed_kernels": ["b"]}
+    baseline = {"kernels": {"a": {"speedup": 1.5, "correct": True}},
+                "geomean_speedup": 1.5, "serving": {},
+                "search_infra": {"quarantined": 0, "recoveries": 0,
+                                 "failed_kernels": []}}
+    bad = cr.compare(cur, baseline, kernel_tol=0.1, serving_tol=0.6)
+    assert any("quarantined changed 0 -> 2" in m for m in bad)
+    assert any("recoveries changed 0 -> 1" in m for m in bad)
+    assert any("kernels failed during the bench run" in m for m in bad)
+    # clean run passes the new gate
+    clean = cr.extract({"kernels": [{"kernel": "a", "speedup": 1.5,
+                                     "correct": True, "stages": {}}],
+                        "geomean_speedup": 1.5, "stage_totals": {},
+                        "serving": []})
+    assert cr.compare(clean, baseline, kernel_tol=0.1, serving_tol=0.6) \
+        == []
