@@ -44,7 +44,11 @@ BASELINE = os.path.join(HERE, "baseline.json")
 # prompts must never alias a 16-token page). The request-lifecycle
 # counters pin the robustness layer: exact abort/reject/fail/recovery
 # counts for the chaos_mix scenario, zero on every undisturbed row.
-EXACT_SERVING = ("steps", "prefill_compiles", "preemptions",
+# ``readbacks`` pins the one-batched-host-readback-per-step property on
+# every engine row, including the tensor-parallel ``device-sharded``
+# twins (readbacks == steps by construction; a second readback per step
+# would double it).
+EXACT_SERVING = ("steps", "readbacks", "prefill_compiles", "preemptions",
                  "sched_reorders", "prefix_hit_tokens", "cow_copies",
                  "aborted", "rejected", "failed", "deadline_expired",
                  "recoveries")
@@ -77,11 +81,12 @@ def extract(bench: dict) -> dict:
         "failed_kernels": sorted(failed),
     }
     for row in bench.get("serving", []):
-        # gate the device engine plus the shared_prefix no-cache and
-        # chaos_mix no-chaos twins (reference rows exist only under
-        # --compare and stay ungated)
+        # gate the device engine plus the shared_prefix no-cache,
+        # chaos_mix no-chaos, and tensor-parallel sharded twins
+        # (reference rows exist only under --compare and stay ungated)
         if row.get("engine", "device") not in ("device", "device-nocache",
-                                               "device-nochaos"):
+                                               "device-nochaos",
+                                               "device-sharded"):
             continue
         slim = {"tok_per_s": round(row["tok_per_s"], 2)}
         for key in EXACT_SERVING:

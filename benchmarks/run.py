@@ -31,6 +31,19 @@ import argparse
 import glob
 import json
 import os
+import sys
+
+# The serving benchmark's tensor-parallel rows need >= 4 devices; the
+# forced host platform split must land in XLA_FLAGS before anything
+# imports jax (serve_bench is imported lazily, long after jax is live,
+# so it cannot set the flag itself when run through this harness).
+# Single-device rows and kernel timings are unaffected — they run on
+# device 0, whose computation is identical under the virtual split.
+if "jax" not in sys.modules and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
 
 import numpy as np
 

@@ -66,6 +66,16 @@ import os
 import sys
 import time
 
+# The sharded serving rows need >= 4 devices; forcing the host platform
+# device count must happen before jax initializes its backend. Device
+# rows are unaffected: single-device engines run on device 0, whose
+# computation is identical with or without the virtual split.
+if "jax" not in sys.modules and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
+
 import numpy as np
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
@@ -199,6 +209,10 @@ def _metrics_row(wall, toks, ttfts, stats, streams) -> dict:
         "tok_per_s": toks / wall if wall else 0.0,
         "ttft_ms": float(np.mean(ttfts)) * 1e3 if ttfts else None,
         "steps": stats.get("steps"),
+        # one batched host readback per dispatched step — the property
+        # the sharded engine must preserve (exact-gated; the host-driven
+        # reference engine predates the counter and reports 0)
+        "readbacks": stats.get("readbacks", 0),
         "prefill_compiles": stats.get("prefill_compiles"),
         "paged": stats.get("paged", False),
         "preemptions": stats.get("preemptions", 0),
@@ -335,6 +349,15 @@ def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
     # which slot-coupled families (MoE capacity routing) observe
     slot_independent = bool(getattr(registry.module_for(cfg),
                                     "PAGED_OK", False))
+    # tensor-parallel twin: the same engine sharded over a (2, 2)
+    # (data, model) mesh — dense family only, and only when the forced
+    # host platform actually yielded >= 4 devices. Streams must be
+    # bit-identical to the single-device row (streams_match_sharded).
+    sharded_mesh = None
+    if cfg.family == "dense" and len(jax.devices()) >= 4:
+        from jax.sharding import Mesh
+        sharded_mesh = Mesh(
+            np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
     rows = []
     for mix in mixes:
         kw = dict(slots=SLOTS, max_seq=MAX_SEQ)
@@ -386,6 +409,19 @@ def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
                     r_["warm_ttft_ms"] = float(np.mean(ts)) * 1e3 \
                         if ts else None
             rows.append(row0)
+        if sharded_mesh is not None:
+            # fresh injector for the chaos twin: the plan is stateful
+            chaos_s = None
+            if mix == "chaos_mix":
+                from repro.serving import ChaosInjector
+                chaos_s = ChaosInjector(_chaos_plan())
+            llm_s = LLMEngine(params, cfg, chaos=chaos_s,
+                              mesh=sharded_mesh, **kw)
+            row_s = {"arch": arch, "mix": mix, "engine": "device-sharded",
+                     **run_llm(llm_s, reqs)}
+            row_s["streams_match_sharded"] = \
+                row_s["streams"] == row["streams"]
+            rows.append(row_s)
     for row in rows:
         row.pop("_ttfts", None)
         row.pop("_hits", None)
@@ -483,6 +519,8 @@ def print_rows(rows):
             pfx += f",warm_ttft_ms={r['warm_ttft_ms']:.0f}"
         if r.get("streams_match_nocache") is not None:
             pfx += f",match_nocache={r['streams_match_nocache']}"
+        if r.get("streams_match_sharded") is not None:
+            pfx += f",match_sharded={r['streams_match_sharded']}"
         if any(r.get(k) for k in ("aborted", "rejected", "failed",
                                   "deadline_expired", "recoveries")):
             pfx += (f",aborted={r['aborted']},rejected={r['rejected']},"
@@ -553,6 +591,14 @@ def main(argv=None) -> int:
             print(f"# STREAM MISMATCH vs reference: "
                   f"{r['arch']}/{r['mix']}")
         rc |= bool(bad)
+    if args.check or args.check_golden:
+        # sharded rows must be bit-identical to the single-device rows
+        bad_s = [r for r in rows
+                 if r.get("streams_match_sharded") is False]
+        for r in bad_s:
+            print(f"# STREAM MISMATCH sharded vs single-device: "
+                  f"{r['arch']}/{r['mix']}")
+        rc |= bool(bad_s)
     if args.check_golden or args.record_golden:
         rc |= not check_golden(rows, record=args.record_golden)
     if args.json:

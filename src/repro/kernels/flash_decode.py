@@ -8,9 +8,13 @@ math (running online-softmax merge in VMEM scratch across grid steps).
 The same merge runs at TWO levels:
   1. on-chip: across KV chunks inside this kernel (this file), and
   2. cross-device: sequence-parallel decode shards the KV cache along the
-     sequence axis; per-shard partials from this kernel are merged with
-     collectives in ``repro/serving/decode.py`` — the distributed form of
-     Kernel 1.
+     sequence axis and merges per-shard partials with collectives — the
+     distributed form of Kernel 1 (``sharding/rules.py`` maps ``kv_seq``
+     to the ``model`` axis for it). The paged serving engine does NOT use
+     this path: its tensor-parallel plan (``repro.sharding.tp``) shards
+     heads instead, because the cross-device LSE merge is not bitwise
+     identical to single-device execution while head-sharded all-gathers
+     are.
 
 Grid: ``(batch * kv_heads, num_chunks)`` with the chunk axis sequential
 ("arbitrary"), carrying ``(acc, m, l)`` in VMEM scratch — the classic

@@ -16,6 +16,10 @@ CPU-runnable:
     # 5 (quarantine + swap-restore recovery), per-request deadline:
     PYTHONPATH=src python -m repro.launch.serve --requests 6 \
         --chaos "abort@2:rid=1,device_fault@5:slot=0" --deadline 30
+    # tensor-parallel over a forced-host 4-device mesh (data=2, model=2);
+    # streams are bit-identical to the single-device run:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --tp 2 --slots 4
 """
 
 from __future__ import annotations
@@ -59,14 +63,18 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
         prefix_cache: bool = True, scheduler: str = "fcfs",
         temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
         sampling_seed: int | None = None, deadline: float | None = None,
-        chaos: str | None = None):
+        chaos: str | None = None, tp: int | None = None):
     cfg = configs.smoke(arch) if smoke else configs.get(arch)
     params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
     injector = ChaosInjector(parse_chaos(chaos)) if chaos else None
+    mesh = None
+    if tp is not None:
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(tp)
     llm = LLMEngine(params, cfg, slots=slots, max_seq=max_seq,
                     scheduler=scheduler, page_size=page_size,
                     num_pages=num_pages, prefix_cache=prefix_cache,
-                    chaos=injector)
+                    chaos=injector, mesh=mesh)
     sp = SamplingParams(temperature=temperature, top_k=top_k, top_p=top_p,
                         seed=sampling_seed)
     rng = np.random.default_rng(seed)
@@ -105,6 +113,13 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
               f"{s['prefill_compiles']} prefill compiles, "
               f"sampling={mode}, scheduler={s['scheduler']} "
               f"({s['sched_reorders']} reorders)")
+        if "mesh" in s:
+            m = s["mesh"]
+            sharded = [k for k in ("heads_tp", "mlp_tp", "vocab_tp",
+                                   "batch_dp") if m[k]] or ["replicated"]
+            print(f"mesh: data={m['data']} x model={m['model']} "
+                  f"({', '.join(sharded)}), {s['readbacks']} readbacks "
+                  f"in {s['steps']} steps")
         if s["paged"]:
             print(f"paged pool: {s['num_pages']} pages x {s['page_size']} "
                   f"rows ({s['preempt_mode']} preemption) — "
@@ -167,6 +182,10 @@ def main():
                     help="step-indexed fault plan, e.g. "
                          "'abort@2:rid=1,device_fault@5:slot=0,"
                          "pool_exhaustion@8:pages=3;steps=4'")
+    ap.add_argument("--tp", type=int, default=None, metavar="M",
+                    help="model-parallel size: serve sharded over a "
+                         "(devices/M, M) (data, model) mesh; streams "
+                         "stay bit-identical to the single-device run")
     args = ap.parse_args()
     run(arch=args.arch, requests=args.requests, slots=args.slots,
         max_new=args.max_new, max_seq=args.max_seq,
@@ -175,7 +194,7 @@ def main():
         scheduler=args.scheduler,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         sampling_seed=args.sampling_seed, deadline=args.deadline,
-        chaos=args.chaos)
+        chaos=args.chaos, tp=args.tp)
 
 
 if __name__ == "__main__":

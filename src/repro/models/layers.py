@@ -24,6 +24,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
+from repro.sharding import tp
 
 
 # ---------------------------------------------------------------------------
@@ -125,7 +126,10 @@ def embed_tokens(embedding, tokens):
 
 
 def unembed(x, lm_head):
-    return jnp.einsum("...d,dv->...v", x, lm_head.astype(x.dtype))
+    # vocab-sharded under an active serving TP plan: the local partial
+    # covers a contiguous vocab slice, all-gathered back to full order
+    return tp.gather_vocab(
+        jnp.einsum("...d,dv->...v", x, lm_head.astype(x.dtype)))
 
 
 def ce_loss(logits, labels, vocab: int):
@@ -173,7 +177,13 @@ def qkv_proj(p, x, cfg: ModelConfig):
 
 
 def out_proj(p, o, dtype):
-    """o: [B, S, Hq, dh] -> [B, S, D] via wo [Hq, dh, D]."""
+    """o: [B, S, Hq, dh] -> [B, S, D] via wo [Hq, dh, D].
+
+    Under an active serving TP plan the incoming heads are a local
+    shard; they are all-gathered (concatenated, no partial sums) before
+    the replicated ``wo`` contraction so the result stays bit-identical
+    to the single-device einsum."""
+    o = tp.gather_heads(o)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dtype))
 
 
@@ -500,9 +510,15 @@ def mlp_params(key, cfg: ModelConfig, dtype, d_ff=None):
 
 
 def mlp_block(p, x):
-    """SwiGLU: gate/up fused matmul -> silu_and_mul kernel -> down proj."""
+    """SwiGLU: gate/up fused matmul -> silu_and_mul kernel -> down proj.
+
+    Under an active serving TP plan ``w_gateup`` columns are sharded
+    (pre-permuted so each shard holds its own gate/up pair, see
+    ``sharding.tp.gateup_permutation``); the local ``silu_and_mul``
+    outputs are all-gathered before the replicated down projection."""
     h = jnp.einsum("bsd,df->bsf", x, p["w_gateup"].astype(x.dtype))
     h = ops.silu_and_mul(h)
+    h = tp.gather_mlp(h)
     return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
 
 

@@ -20,6 +20,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+from repro.sharding import tp
 
 # Right-padding a prompt to a bucketed length is safe here: the cache is
 # positional K/V and attention is causal, so pad positions can never
@@ -331,21 +332,34 @@ def decode_step_paged(params, cfg: ModelConfig, pool, page_table, token,
     blocks through the same table (``ops.paged_flash_decode_attention``),
     so the math is bit-identical to ``decode_step`` over the contiguous
     cache the table describes. The pool rides in the scan carry exactly
-    like the contiguous cache (in-place aliased carry updates)."""
+    like the contiguous cache (in-place aliased carry updates).
+
+    Under an active serving TP plan (``sharding.tp``, traced inside the
+    engine's ``shard_map``), the slot batch splits over ``data``: each
+    data shard embeds/attends/samples only its own rows, but the pool
+    is replicated over ``data`` (radix-shared pages and swap-out reads
+    need every row addressable), so the freshly-computed K/V rows are
+    all-gathered across ``data`` before the full-batch pool scatter.
+    The incoming ``page_table`` is ``data``-sharded (local rows drive
+    the attention gather); write indices come from the gathered full
+    table. With no plan every ``tp.*`` call is the identity."""
     from repro.kernels import ops
     if seq_shard_axis is not None:
         raise NotImplementedError(
             "sequence-sharded decode uses the contiguous split-KV path")
     hidden = L.embed_tokens(params["embed"], token[:, None]) \
         .astype(cfg.jnp_dtype)                                  # [B,1,D]
-    residual = jnp.zeros_like(hidden)
     page = pool["k"].shape[2]
     n_pt = page_table.shape[1]
     b_idx = jnp.arange(token.shape[0])
+    pt_all = tp.gather_data(page_table)     # full table for write indices
     pidx = jnp.clip(pos // page, 0, n_pt - 1)
-    phys = page_table[b_idx, pidx]          # [B] physical page being written
+    phys = pt_all[b_idx, pidx]              # [B] physical page being written
     off = pos % page
-    kv_len = pos + 1
+    hidden = tp.data_shard(hidden)          # this shard's slot rows
+    pos_q = tp.data_shard(pos)
+    residual = jnp.zeros_like(hidden)
+    kv_len = pos_q + 1
 
     def body(carry, layer_in):
         p_layer, li = layer_in
@@ -355,10 +369,12 @@ def decode_step_paged(params, cfg: ModelConfig, pool, page_table, token,
         normed, residual = L.add_rms_norm(hidden, residual,
                                           p_layer["attn_norm"], cfg.norm_eps)
         q, k_new, v_new = L.qkv_proj(p_layer["attn"], normed, cfg)
-        q = L.rope(q, pos[:, None], cfg.rope_theta)
-        k_new = L.rope(k_new, pos[:, None], cfg.rope_theta)
-        k_l = k_l.at[phys, off].set(k_new[:, 0].astype(k_l.dtype))
-        v_l = v_l.at[phys, off].set(v_new[:, 0].astype(v_l.dtype))
+        q = L.rope(q, pos_q[:, None], cfg.rope_theta)
+        k_new = L.rope(k_new, pos_q[:, None], cfg.rope_theta)
+        k_w = tp.gather_data(k_new[:, 0])   # full-batch rows for the pool
+        v_w = tp.gather_data(v_new[:, 0])
+        k_l = k_l.at[phys, off].set(k_w.astype(k_l.dtype))
+        v_l = v_l.at[phys, off].set(v_w.astype(v_l.dtype))
         ks = lax.dynamic_update_index_in_dim(ks, k_l, li, 0)
         vs = lax.dynamic_update_index_in_dim(vs, v_l, li, 0)
         o = ops.paged_flash_decode_attention(q[:, 0], k_l, v_l, page_table,

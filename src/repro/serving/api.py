@@ -75,17 +75,23 @@ class LLMEngine:
     (``"swap"`` / ``"recompute"``); ``page_size`` / ``num_pages`` /
     ``paged`` configure the cache manager (auto-selects paged for
     families that support it; ``num_pages`` below full subscription
-    oversubscribes)."""
+    oversubscribes). ``mesh`` takes a ``(data, model)``
+    ``jax.sharding.Mesh`` (see ``repro.launch.mesh.make_local_mesh``)
+    and runs the donated step programs sharded over it via
+    ``repro.sharding.tp`` — token streams stay bit-identical to the
+    single-device engine."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  max_seq: int = 512, scheduler="fcfs", preemption="swap",
                  paged: Optional[bool] = None, page_size: int = 16,
                  num_pages: Optional[int] = None, prefix_cache: bool = True,
-                 sampling: Optional[SamplingParams] = None, chaos=None):
+                 sampling: Optional[SamplingParams] = None, chaos=None,
+                 mesh=None):
         self.cfg = cfg
         self.engine = Engine(
             params, cfg, slots=slots, max_seq=max_seq, sampling=sampling,
             scheduler=scheduler, preemption=preemption, chaos=chaos,
+            mesh=mesh,
             cache_manager=CacheConfig(paged=paged, page_size=page_size,
                                       num_pages=num_pages,
                                       prefix_cache=prefix_cache))

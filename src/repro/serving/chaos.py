@@ -57,6 +57,8 @@ class InjectedDeviceFault(RuntimeError):
 
 
 class ChaosInjector:
+    """Deterministic step-indexed fault injector for the serving engine."""
+
     def __init__(self, faults: Iterable[Fault]):
         faults = list(faults)
         for f in faults:

@@ -53,6 +53,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
@@ -60,6 +61,7 @@ from repro.serving.cache_manager import CacheConfig, make_cache_manager
 from repro.serving.chaos import ChaosInjector
 from repro.serving.sampling import SamplingParams, sample_tokens
 from repro.serving.scheduler import make_preemption, make_scheduler
+from repro.sharding import tp
 
 
 @contextlib.contextmanager
@@ -90,6 +92,8 @@ def _jit_cache_size(fn) -> Optional[int]:
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: prompt, budget, sampling, and its stream."""
+
     rid: int
     prompt: np.ndarray                  # token ids [S] (or frames [S, D])
     max_new_tokens: int = 16
@@ -128,11 +132,14 @@ class _Slot:
 
 
 class Engine:
+    """Device-resident continuous-batching core: one donated jitted program
+    and one batched host readback per decode step."""
+
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  max_seq: int = 512,
                  sampling: Optional[SamplingParams] = None,
                  scheduler=None, preemption=None, cache_manager=None,
-                 chaos=None,
+                 chaos=None, mesh=None,
                  greedy: Optional[bool] = None,
                  preempt: Optional[str] = None,
                  paged: Optional[bool] = None,
@@ -145,6 +152,12 @@ class Engine:
         ``repro.serving.cache_manager``. ``chaos`` takes a
         ``serving.chaos.ChaosInjector`` (or a plain ``reliability.Fault``
         list) whose scheduled faults are injected into the decode loop.
+        ``mesh`` takes a ``(data, model)`` ``jax.sharding.Mesh`` (see
+        ``launch/mesh.py``): the donated programs run under ``shard_map``
+        with weights, the paged KV pool, and the slot batch sharded per
+        the plan ``repro.sharding.tp`` resolves from the logical-axis
+        rules — token streams stay bit-identical to the single-device
+        engine (all collectives are all-gathers).
 
         ``greedy=``, ``preempt=``, and ``paged=``/``page_size=``/
         ``num_pages=`` are the pre-layered kwargs, kept as deprecation
@@ -186,7 +199,20 @@ class Engine:
         self.paged = self.cm.paged
         self.page_size = getattr(self.cm, "page_size", None)
         self.num_pages = getattr(self.cm, "num_pages", None)
-        self.cache = self.cm.init()
+        self._plan = None
+        if mesh is not None:
+            if not self.paged:
+                raise ValueError(
+                    "mesh serving requires the paged cache manager (the "
+                    "contiguous cache keeps the split-KV shard_map path)")
+            self._plan = tp.make_plan(cfg, mesh, slots)
+            # weights move to the mesh here (gate/up columns permuted per
+            # shard when the MLP axis shards); carries and the pool get
+            # replicated / heads-sharded placements below so donation
+            # round-trips a consistent committed sharding
+            self.params = tp.shard_params(params, cfg, self._plan)
+            self._pspecs = tp.param_specs(self.params, self._plan)
+        self.cache = self._put_cache(self.cm.init())
         self.chaos = None
         if chaos is not None:
             self.chaos = chaos if hasattr(chaos, "on_step") \
@@ -202,59 +228,130 @@ class Engine:
         # device-resident per-slot decode state (+ per-slot sampling
         # parameters and the per-request base PRNG keys — the key buffer
         # rides in the donated carry with the rest)
-        self._token = jnp.zeros((slots,), jnp.int32)
-        self._pos = jnp.zeros((slots,), jnp.int32)
-        self._active = jnp.zeros((slots,), jnp.bool_)
-        self._emitted = jnp.zeros((slots,), jnp.int32)
-        self._max_new = jnp.zeros((slots,), jnp.int32)
-        self._keys = jnp.zeros((slots, 2), jnp.uint32)
-        self._temp = jnp.zeros((slots,), jnp.float32)
-        self._topk = jnp.zeros((slots,), jnp.int32)
-        self._topp = jnp.ones((slots,), jnp.float32)
+        self._fresh_carries()
         # the decode step specializes on "has any resident request ever
         # been non-greedy": the all-greedy program is the historical bare
         # argmax; admitting the first sampling request rebuilds it once
         self._greedy_only = self.default_sampling.greedy
-        self._step_fn = jax.jit(self._make_step(self._greedy_only),
-                                donate_argnums=(1, 2, 3, 4, 5, 7))
+        self._step_fn = self._jit_step(self._greedy_only)
         # Admission (prefill + pool scatter + slot state reset) is ONE
         # jitted program keyed by the (padded) prompt shape: bucketed
         # families compile at most log2(max_seq)+1 of them; exact-length
         # families (MoE capacity routing, recurrences, bidirectional
         # encoders) compile per unique length — the historical engine's
         # behavior, minus its eager scatter and host argmax.
-        self._admit_fn = jax.jit(
-            self._make_admit(self._greedy_only),
-            donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+        self._admit_fn = self._jit_admit(self._greedy_only)
         # prefill compiles accumulated by admit programs replaced on the
         # greedy->sampling flip (stats() adds the live program's count)
         self._compiles_base = 0
         if self.paged:
             # swap-in restore; compile key = saved page count (<= n_pt)
-            self._restore_fn = jax.jit(
-                self._make_restore(),
-                donate_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8, 9))
+            self._restore_fn = self._jit_restore()
         self._prefix_cache = self.paged and self.cm.prefix_cache \
             and self._pad_ok
         if self._prefix_cache:
             # radix-hit admission: gather prefix pages + prefill the
             # suffix only; compile key = the suffix bucket shape
-            self._admit_suffix_fn = jax.jit(
-                self._make_admit_suffix(self._greedy_only),
-                donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+            self._admit_suffix_fn = self._jit_admit_suffix(
+                self._greedy_only)
             # whole-page device copy for copy-on-write
-            self._cow_fn = jax.jit(
-                lambda cache, src, dst: registry.copy_pages(
-                    self.cfg, cache, src, dst, self.page_size),
-                donate_argnums=(0,))
+            self._cow_fn = self._jit_cow()
         # (emit arrays, request snapshot) of the last dispatched step, not
         # yet read back — drained after the NEXT dispatch (overlap)
         self._pending = None
         self._steps = 0
+        self._readbacks = 0
         self._prefill_shapes: set[tuple] = set()
         self._suffix_shapes: set[int] = set()
 
+    # -- device placement (mesh) ---------------------------------------------
+
+    def _dev(self, x):
+        """Replicate a carry buffer on the mesh (identity off-mesh)."""
+        return x if self._plan is None else tp.replicate(x, self._plan)
+
+    def _put_cache(self, cache):
+        """Place a fresh KV pool on the mesh (kv_heads over ``model``
+        when the plan shards heads; identity off-mesh)."""
+        return cache if self._plan is None \
+            else tp.put_cache(cache, self._plan)
+
+    def _fresh_carries(self) -> None:
+        """(Re)build the nine per-slot carry buffers as zeros — shared by
+        ``__init__`` and the device-fault recovery (same shapes, so the
+        step program never retraces)."""
+        slots = self.n_slots
+        self._token = self._dev(jnp.zeros((slots,), jnp.int32))
+        self._pos = self._dev(jnp.zeros((slots,), jnp.int32))
+        self._active = self._dev(jnp.zeros((slots,), jnp.bool_))
+        self._emitted = self._dev(jnp.zeros((slots,), jnp.int32))
+        self._max_new = self._dev(jnp.zeros((slots,), jnp.int32))
+        self._keys = self._dev(jnp.zeros((slots, 2), jnp.uint32))
+        self._temp = self._dev(jnp.zeros((slots,), jnp.float32))
+        self._topk = self._dev(jnp.zeros((slots,), jnp.int32))
+        self._topp = self._dev(jnp.ones((slots,), jnp.float32))
+
     # -- jitted programs -----------------------------------------------------
+
+    def _jit_step(self, greedy_only: bool):
+        """jit (single-device) or jit(shard_map) (mesh) of the step body.
+        Carries ride replicated (``P()``); the paged pool is heads-
+        sharded; the page table is ``data``-sharded when the slot batch
+        is. Donation tuples match the historical single-device jits."""
+        fn = self._make_step(greedy_only)
+        donate = (1, 2, 3, 4, 5, 7)
+        if self._plan is None:
+            return jax.jit(fn, donate_argnums=donate)
+        rep, kv = P(), tp.kv_specs(self._plan)
+        pt = P("data", None) if self._plan.batch else rep
+        in_specs = (self._pspecs, kv) + (rep,) * 9 + (pt,)
+        out_specs = (kv, rep, rep, rep, rep, rep, (rep, rep))
+        return tp.wrap(self._plan, fn, in_specs, out_specs, donate)
+
+    def _jit_admit(self, greedy_only: bool):
+        fn = self._make_admit(greedy_only)
+        donate = (1, 2, 3, 4, 5, 6, 7, 8, 9, 10)
+        if self._plan is None:
+            return jax.jit(fn, donate_argnums=donate)
+        rep, kv = P(), tp.kv_specs(self._plan)
+        # prompt/scalars/pages are all replicated: prefill's batch of one
+        # never splits over ``data``; weights shard it over ``model``
+        in_specs = (self._pspecs, kv) + (rep,) * (9 + 10)
+        out_specs = (kv,) + (rep,) * 10
+        return tp.wrap(self._plan, fn, in_specs, out_specs, donate)
+
+    def _jit_admit_suffix(self, greedy_only: bool):
+        fn = self._make_admit_suffix(greedy_only)
+        donate = (1, 2, 3, 4, 5, 6, 7, 8, 9, 10)
+        if self._plan is None:
+            return jax.jit(fn, donate_argnums=donate)
+        rep, kv = P(), tp.kv_specs(self._plan)
+        in_specs = (self._pspecs, kv) + (rep,) * (9 + 12)
+        out_specs = (kv,) + (rep,) * 10
+        return tp.wrap(self._plan, fn, in_specs, out_specs, donate)
+
+    def _jit_restore(self):
+        fn = self._make_restore()
+        donate = (0, 1, 2, 3, 4, 5, 6, 7, 8, 9)
+        if self._plan is None:
+            return jax.jit(fn, donate_argnums=donate)
+        rep, kv = P(), tp.kv_specs(self._plan)
+        # ``saved`` (the host swap payload) shares the pool's kv_heads
+        # axis 3, so each shard writes back only its own head slice
+        in_specs = (kv,) + (rep,) * 9 + (kv,) + (rep,) * 10
+        out_specs = (kv,) + (rep,) * 9
+        return tp.wrap(self._plan, fn, in_specs, out_specs, donate)
+
+    def _jit_cow(self):
+        def cow(cache, src, dst):
+            return registry.copy_pages(self.cfg, cache, src, dst,
+                                       self.page_size)
+
+        if self._plan is None:
+            return jax.jit(cow, donate_argnums=(0,))
+        rep, kv = P(), tp.kv_specs(self._plan)
+        # per-shard page copy: each model shard copies its head slice
+        return tp.wrap(self._plan, cow, (kv, rep, rep), kv, (0,))
 
     def _make_step(self, greedy_only: bool):
         vocab, max_seq = self.cfg.vocab, self.max_seq
@@ -279,8 +376,18 @@ class Engine:
                 # slots, e.g. MoE capacity routing, see an identical pool
                 # state). temperature==0 rows are the historical argmax;
                 # ``emitted`` is the stream index folded into the key.
-                nxt = sample_tokens(logits[:, :vocab], keys, emitted,
-                                    temp, topk, topp)
+                # Under a data-sharded mesh plan the logits rows are this
+                # shard's slots only, so the key/param carries slice down
+                # to match — the draw itself stays per-slot.
+                nxt = sample_tokens(logits[:, :vocab], tp.data_shard(keys),
+                                    tp.data_shard(emitted),
+                                    tp.data_shard(temp),
+                                    tp.data_shard(topk),
+                                    tp.data_shard(topp))
+            # the decode step's single cross-``data`` exchange: gather the
+            # per-slot token back to the full slot axis (identity off-mesh)
+            # — stop conditions and the emit pair then stay replicated
+            nxt = tp.gather_data(nxt)
             new_pos = pos + 1
             new_emitted = emitted + active.astype(jnp.int32)
             done = active & ((new_emitted >= max_new)
@@ -586,21 +693,16 @@ class Engine:
             # program + bucket; the carry layout is identical, so
             # in-flight state is unaffected)
             self._greedy_only = False
-            self._step_fn = jax.jit(self._make_step(False),
-                                    donate_argnums=(1, 2, 3, 4, 5, 7))
+            self._step_fn = self._jit_step(False)
             n = _jit_cache_size(self._admit_fn)
             if n is not None:
                 self._compiles_base += n
-            self._admit_fn = jax.jit(
-                self._make_admit(False),
-                donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+            self._admit_fn = self._jit_admit(False)
             if self._prefix_cache:
                 n = _jit_cache_size(self._admit_suffix_fn)
                 if n is not None:
                     self._compiles_base += n
-                self._admit_suffix_fn = jax.jit(
-                    self._make_admit_suffix(False),
-                    donate_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+                self._admit_suffix_fn = self._jit_admit_suffix(False)
         return sp
 
     def _bucket_len(self, n: int) -> Optional[int]:
@@ -948,18 +1050,10 @@ class Engine:
             # the radix tree's cached KV died with the pool
             self.cm.clear_tree()
             self.cm.pool.check()
-        # rebuild the device-side state (same shapes: no retrace)
-        self.cache = self.cm.init()
-        slots = self.n_slots
-        self._token = jnp.zeros((slots,), jnp.int32)
-        self._pos = jnp.zeros((slots,), jnp.int32)
-        self._active = jnp.zeros((slots,), jnp.bool_)
-        self._emitted = jnp.zeros((slots,), jnp.int32)
-        self._max_new = jnp.zeros((slots,), jnp.int32)
-        self._keys = jnp.zeros((slots, 2), jnp.uint32)
-        self._temp = jnp.zeros((slots,), jnp.float32)
-        self._topk = jnp.zeros((slots,), jnp.int32)
-        self._topp = jnp.ones((slots,), jnp.float32)
+        # rebuild the device-side state (same shapes and shardings: no
+        # retrace, and mesh placements survive the recovery)
+        self.cache = self._put_cache(self.cm.init())
+        self._fresh_carries()
         self.recoveries += 1
 
     # -- one engine step -----------------------------------------------------
@@ -1057,6 +1151,11 @@ class Engine:
 
     def _apply(self, pending):
         (emit_tok, done), reqs = pending
+        # THE host readback: one batched device->host transfer settles a
+        # whole dispatched step (sharded runs included — the emit pair is
+        # replicated by construction, so no extra per-shard transfers).
+        # Counted so the bench CI can gate one-readback-per-step exactly.
+        self._readbacks += 1
         tok = np.asarray(emit_tok)
         fin = np.asarray(done)
         for i, req in enumerate(reqs):
@@ -1127,6 +1226,7 @@ class Engine:
                     _jit_cache_size(self._admit_suffix_fn) or 0
         out = {
             "steps": self._steps,
+            "readbacks": self._readbacks,
             "prefill_compiles": int(prefill_compiles),
             "prefill_shapes": sorted(s[0] for s in self._prefill_shapes),
             "suffix_shapes": sorted(self._suffix_shapes),
@@ -1142,6 +1242,8 @@ class Engine:
             "recoveries": self.recoveries,
         }
         out.update(self.scheduler.stats())
+        if self._plan is not None:
+            out["mesh"] = self._plan.describe()
         if self.chaos is not None:
             out.update(self.chaos.stats())
         if self.paged:

@@ -40,6 +40,8 @@ TRAP_PAGE = 0
 
 
 class PagePool:
+    """Refcounted physical-page allocator behind the paged KV cache."""
+
     def __init__(self, num_pages: int, page_size: int, slots: int,
                  pages_per_slot: int):
         if num_pages < pages_per_slot:

@@ -36,6 +36,8 @@ class _Node:
 
 
 class RadixCache:
+    """Radix tree over finished prompts, one node per full KV page."""
+
     def __init__(self, page_size: int):
         self.page_size = page_size
         self.root = _Node((), None, None)

@@ -22,6 +22,8 @@ from repro.serving.engine import Request, _Slot
 
 
 class ReferenceEngine:
+    """Host-driven greedy oracle pinning the pre-refactor token streams."""
+
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  max_seq: int = 512, greedy: bool = True, sampling=None):
         # the oracle is greedy-only BY DESIGN: it pins the pre-refactor

@@ -40,6 +40,8 @@ from typing import Protocol, runtime_checkable
 
 @runtime_checkable
 class Scheduler(Protocol):
+    """Admission-order policy surface consumed by the engine."""
+
     name: str
 
     def push(self, req) -> None: ...

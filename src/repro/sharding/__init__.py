@@ -1,3 +1,5 @@
-"""Logical-axis partitioning rules (DP/FSDP/TP/EP/SP)."""
+"""Logical-axis partitioning rules (DP/FSDP/TP/EP/SP) and the serving
+tensor-parallel plan (``repro.sharding.tp``)."""
+from repro.sharding import tp
 from repro.sharding.rules import (batch_spec, sharding_for, spec_for,
                                   tree_shardings)

@@ -10,11 +10,15 @@ Physical strategy:
     ``pod`` composes with ``data`` for batch / FSDP at multi-pod scale).
   * TP: head / mlp / vocab / expert axes shard over ``model``.
   * SP (decode): the KV-cache sequence axis shards over ``model`` —
-    consumed by the split-KV merge path (``serving/decode.py``).
+    consumed by the split-KV merge path in ``kernels/flash_decode.py``
+    (the contiguous-cache alternative; the paged serving plan in
+    ``repro.sharding.tp`` shards heads instead, which keeps streams
+    bit-identical).
 
 A rule is skipped (axis replicated) when the dim is not divisible by the
 mesh axis size — e.g. qwen2's 14 heads or yi's 56 heads on a 16-way model
-axis; the MLP/vocab axes still shard (noted per-arch in EXPERIMENTS.md).
+axis; the MLP/vocab axes still shard. Per-arch divisibility notes live in
+``docs/ARCHITECTURE.md`` (Sharded serving).
 """
 
 from __future__ import annotations
@@ -78,6 +82,7 @@ def spec_for(logical_axes: tuple, shape: tuple, mesh: Mesh) -> P:
 
 
 def sharding_for(logical_axes: tuple, shape: tuple, mesh: Mesh):
+    """NamedSharding for ``shape`` under the resolved logical-axis spec."""
     return NamedSharding(mesh, spec_for(logical_axes, shape, mesh))
 
 

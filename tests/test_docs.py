@@ -1,0 +1,52 @@
+"""Docs-consistency gate: every intra-repo reference in README, docs/,
+and the sharding/serving module docstrings must point at a real file.
+
+Runs ``tools/check_docs.py`` exactly as the CI docs job does, plus a
+negative control proving the checker actually fails on a broken
+reference (so a silently-degraded scanner can't pass CI).
+"""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECKER = os.path.join(REPO, "tools", "check_docs.py")
+
+
+def _run(root):
+    return subprocess.run(
+        [sys.executable, CHECKER, "--root", root, "-v"],
+        capture_output=True, text=True, timeout=60)
+
+
+def test_repo_docs_references_resolve():
+    proc = _run(REPO)
+    assert proc.returncode == 0, (
+        f"broken docs references:\n{proc.stdout}\n{proc.stderr}")
+    assert "all intra-repo references resolve" in proc.stdout
+
+
+def test_checker_fails_on_broken_reference(tmp_path):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (tmp_path / "README.md").write_text(
+        "See [arch](docs/ARCHITECTURE.md) and `src/repro/gone.py`.\n")
+    (docs / "ARCHITECTURE.md").write_text(
+        "Back to [readme](../README.md), plus a dead "
+        "[link](MISSING.md).\n")
+    proc = _run(str(tmp_path))
+    assert proc.returncode == 1, proc.stdout
+    assert "src/repro/gone.py" in proc.stdout
+    assert "MISSING.md" in proc.stdout
+
+
+def test_checker_passes_on_clean_tree(tmp_path):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (tmp_path / "README.md").write_text(
+        "See [arch](docs/ARCHITECTURE.md).\n")
+    (docs / "ARCHITECTURE.md").write_text(
+        "Back to [readme](../README.md).\n")
+    proc = _run(str(tmp_path))
+    assert proc.returncode == 0, proc.stdout

@@ -1,0 +1,70 @@
+"""Tensor-parallel serving: bit-identity vs the single-device engine.
+
+Each test shells out to ``tools/sharded_check.py`` so the forced-host
+device count (``--xla_force_host_platform_device_count``) lands in
+XLA_FLAGS *before* jax initializes — the in-process test session has
+already created the default single-CPU backend. The harness runs both
+engines in one subprocess and compares token streams plus every
+deterministic counter (steps, readbacks, preemptions, prefix hits, CoW
+copies, recoveries) across scenarios: greedy, seeded sampling, forced
+swap preemption, radix prefix-cache hits, and chaos device-fault
+recovery.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECK = os.path.join(REPO, "tools", "sharded_check.py")
+
+
+def _run_check(arch, mesh, devices=4):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.pop("XLA_FLAGS", None)  # the harness sets the device count itself
+    proc = subprocess.run(
+        [sys.executable, CHECK, "--arch", arch, "--mesh", mesh,
+         "--devices", str(devices), "--json"],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, \
+        f"sharded check failed:\n{proc.stdout}\n{proc.stderr}"
+    return json.loads(proc.stdout)
+
+
+def _assert_scenarios(report):
+    sc = report["scenarios"]
+    assert set(sc) == {"greedy", "sampling", "preempt", "prefix", "chaos"}
+    for name, r in sc.items():
+        assert r["ok"], f"{name}: {r['notes']}"
+        assert r["streams_match"], name
+        # one batched host readback per dispatched step, exactly
+        assert r["counters"]["readbacks"] == r["counters"]["steps"]
+    assert sc["preempt"]["counters"]["preemptions"] > 0
+    assert sc["prefix"]["counters"]["prefix_hit_tokens"] > 0
+    assert sc["chaos"]["counters"]["recoveries"] == 1
+
+
+def test_sharded_streams_bit_identical_full_tp():
+    """qwen3-8b smoke on a (2, 2) mesh: heads, MLP, and vocab all shard
+    over ``model``; the slot batch shards over ``data``."""
+    report = _run_check("qwen3-8b", "2,2")
+    assert report["ok"], report
+    assert report["plan"] == {"data": 2, "model": 2, "heads_tp": True,
+                              "mlp_tp": True, "vocab_tp": True,
+                              "batch_dp": True}
+    _assert_scenarios(report)
+
+
+def test_sharded_streams_bit_identical_replicated_heads_fallback():
+    """qwen2-0.5b smoke on a (1, 4) mesh: 1 KV head can't shard over 4,
+    so heads replicate while the MLP and vocab axes still shard — the
+    fallback ``sharding/rules.py`` documents."""
+    report = _run_check("qwen2-0.5b", "1,4")
+    assert report["ok"], report
+    assert report["plan"] == {"data": 1, "model": 4, "heads_tp": False,
+                              "mlp_tp": True, "vocab_tp": True,
+                              "batch_dp": False}
+    _assert_scenarios(report)

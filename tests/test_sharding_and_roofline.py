@@ -51,6 +51,85 @@ def test_rules_multipod_batch():
     assert rules._resolve("batch", 16, mesh) == "data"  # 16 % 32 != 0
 
 
+# Real-mesh rule checks need >1 device, and the in-process jax backend is
+# already initialized single-CPU — so they run in a subprocess that sets
+# --xla_force_host_platform_device_count before importing jax.
+_MESH_RULES_SCRIPT = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import configs
+from repro.sharding import batch_spec, rules, sharding_for, spec_for, tp
+
+m22 = jax.make_mesh((2, 2), ("data", "model"))
+m14 = jax.make_mesh((1, 4), ("data", "model"))
+pod = jax.make_mesh((2, 2, 1), ("pod", "data", "model"))
+
+# logical -> physical resolution on a real mesh
+qwen2 = configs.get("qwen2-0.5b")     # 14 heads, 2 kv heads, d_ff 4864
+yi = configs.get("yi-34b")            # 56 heads, 8 kv heads
+assert qwen2.n_heads == 14 and yi.n_heads == 56
+
+# non-divisible-axis replication fallback: qwen2's 14 heads on a 4-way
+# model axis replicate; yi's 56 shard; both shard on a 2-way axis
+assert rules._resolve("heads", qwen2.n_heads, m14) is None
+assert rules._resolve("heads", qwen2.n_heads, m22) == "model"
+assert rules._resolve("heads", yi.n_heads, m14) == "model"
+assert rules._resolve("kv_heads", yi.n_kv_heads, m14) == "model"
+# the fallback keeps MLP/vocab sharded
+assert rules._resolve("mlp", qwen2.d_ff, m14) == "model"
+assert rules._resolve("vocab", qwen2.padded_vocab, m14) == "model"
+
+# spec_for: per-axis resolution with one-mesh-axis-at-most-once dedup
+assert spec_for(("embed", "heads", "head_dim"),
+                (qwen2.d_model, 14, 64), m14) == P("data", None, None)
+assert spec_for(("embed", "heads", "head_dim"),
+                (yi.d_model, 56, 128), m14) == P("data", "model", None)
+
+# pod+data composition on the multi-pod mesh (pod*data = 4 here)
+assert rules._resolve("batch", 8, pod) == ("pod", "data")
+assert rules._resolve("batch", 2, pod) == "data"     # 2 % 4 != 0
+assert batch_spec(pod, None) == P(("pod", "data"), None)
+assert batch_spec(m22, None) == P("data", None)
+
+# sharding_for round-trips through a real device_put
+x = jax.numpy.zeros((yi.d_model, 56, 128))
+s = sharding_for(("embed", "heads", "head_dim"), x.shape, m14)
+assert isinstance(s, NamedSharding)
+xs = jax.device_put(x, s)
+assert xs.sharding.spec == P("data", "model", None)
+
+# the serving plan resolves through the same rules
+plan = tp.make_plan(configs.smoke("qwen3-8b"), m22, slots=4)
+assert plan.describe() == {"data": 2, "model": 2, "heads_tp": True,
+                           "mlp_tp": True, "vocab_tp": True,
+                           "batch_dp": True}
+plan = tp.make_plan(configs.smoke("qwen2-0.5b"), m14, slots=4)
+assert plan.describe() == {"data": 1, "model": 4, "heads_tp": False,
+                           "mlp_tp": True, "vocab_tp": True,
+                           "batch_dp": False}
+print("MESH_RULES_OK")
+"""
+
+
+def test_rules_on_real_forced_host_mesh():
+    import os
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _MESH_RULES_SCRIPT],
+                          env=env, cwd=repo, capture_output=True,
+                          text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    assert "MESH_RULES_OK" in proc.stdout
+
+
 def test_tree_shardings_structure(mesh16):
     params = {"a": jnp.zeros((8, 4)), "b": {"c": jnp.zeros((4,))}}
     axes = {"a": ("embed", "mlp"), "b": {"c": ("embed",)}}

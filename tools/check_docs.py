@@ -1,0 +1,171 @@
+"""Docs-consistency CI gate: fail on references to files that don't exist.
+
+Scans the repo's prose surfaces —
+
+* ``README.md`` and every ``docs/*.md``
+* the module docstrings of ``src/repro/sharding/*.py`` and
+  ``src/repro/serving/*.py`` (the packages whose docstrings carry
+  cross-references, enforced by the ruff ``D`` rules)
+
+— and checks two kinds of reference:
+
+1. **Relative markdown links** ``[text](target)``: the target (anchor
+   stripped) must exist relative to the referencing document. External
+   schemes (http/https/mailto) and pure-anchor links are skipped.
+2. **Backticked path tokens**: a backticked token that looks like a file
+   path (path charset, contains ``/`` or ends in ``.md``, and ends with a
+   known source extension or a trailing ``/`` for directories) must
+   resolve against one of the candidate roots: the document's own
+   directory, the repo root, ``src/``, ``src/repro/``, ``docs/``, or
+   ``benchmarks/``. Tokens with spaces, globs, or placeholder characters
+   (``<arch>``, ``{mix}``) are ignored — this is a linter for *stale*
+   references, not a parser.
+
+Known generated paths (``benchmarks/artifacts/...``) are allowed even
+when absent, since they only exist after a bench run.
+
+Usage:
+    python tools/check_docs.py [--root /path/to/repo] [-v]
+
+Exit status: 0 when every reference resolves, 1 otherwise (one line per
+broken reference), 2 on usage errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+BACKTICK = re.compile(r"`([^`\n]+)`")
+PATH_CHARSET = re.compile(r"^[A-Za-z0-9_.\-/]+$")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+SOURCE_EXTS = (".py", ".md", ".json", ".yml", ".yaml", ".toml", ".txt",
+               ".jsonl", ".sh")
+# paths produced by running the benchmarks, not committed
+GENERATED_PREFIXES = ("benchmarks/artifacts",)
+
+DOCSTRING_GLOBS = ("src/repro/sharding", "src/repro/serving")
+
+
+def _is_pathlike(token: str) -> bool:
+    if not PATH_CHARSET.match(token):
+        return False
+    if "/" not in token and not token.endswith(".md"):
+        return False
+    if token.startswith(("-", "/")):        # CLI flags, absolute paths
+        return False
+    if token.endswith("/"):
+        return True
+    return token.endswith(SOURCE_EXTS)
+
+
+def _resolve(token: str, roots: list[str]) -> bool:
+    if any(token.startswith(p) for p in GENERATED_PREFIXES):
+        return True
+    want_dir = token.endswith("/")
+    for root in roots:
+        cand = os.path.join(root, token)
+        if want_dir and os.path.isdir(cand):
+            return True
+        if not want_dir and os.path.isfile(cand):
+            return True
+    return False
+
+
+def _check_text(text: str, *, where: str, own_dir: str,
+                repo: str) -> list[str]:
+    roots = [own_dir, repo,
+             os.path.join(repo, "src"),
+             os.path.join(repo, "src", "repro"),
+             os.path.join(repo, "docs"),
+             os.path.join(repo, "benchmarks")]
+    bad = []
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        # markdown links resolve relative to the document only
+        if not os.path.exists(os.path.normpath(os.path.join(own_dir,
+                                                            target))):
+            bad.append(f"{where}: broken link target `{target}`")
+    for m in BACKTICK.finditer(text):
+        token = m.group(1).strip()
+        if not _is_pathlike(token):
+            continue
+        if not _resolve(token, roots):
+            bad.append(f"{where}: backticked path `{token}` "
+                       "does not exist")
+    return bad
+
+
+def check(repo: str, verbose: bool = False) -> list[str]:
+    """Return a list of broken-reference messages (empty = pass)."""
+    bad = []
+    docs = [os.path.join(repo, "README.md")]
+    docs_dir = os.path.join(repo, "docs")
+    if os.path.isdir(docs_dir):
+        docs += sorted(os.path.join(docs_dir, f)
+                       for f in os.listdir(docs_dir) if f.endswith(".md"))
+    n_scanned = 0
+    for path in docs:
+        if not os.path.isfile(path):
+            continue
+        n_scanned += 1
+        rel = os.path.relpath(path, repo)
+        with open(path, encoding="utf-8") as f:
+            bad += _check_text(f.read(), where=rel,
+                               own_dir=os.path.dirname(path), repo=repo)
+    for pkg in DOCSTRING_GLOBS:
+        pkg_dir = os.path.join(repo, pkg)
+        if not os.path.isdir(pkg_dir):
+            continue
+        for fname in sorted(os.listdir(pkg_dir)):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(pkg_dir, fname)
+            rel = os.path.relpath(path, repo)
+            with open(path, encoding="utf-8") as f:
+                try:
+                    doc = ast.get_docstring(ast.parse(f.read()))
+                except SyntaxError as e:
+                    bad.append(f"{rel}: unparseable ({e})")
+                    continue
+            if doc:
+                n_scanned += 1
+                bad += _check_text(doc, where=f"{rel} (docstring)",
+                                   own_dir=os.path.dirname(path),
+                                   repo=repo)
+    if verbose:
+        print(f"# scanned {n_scanned} documents/docstrings under {repo}")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))),
+        help="repo root to scan (default: this file's parent repo)")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    if not os.path.isdir(args.root):
+        print(f"# no such root: {args.root}", file=sys.stderr)
+        return 2
+    bad = check(args.root, verbose=args.verbose)
+    if bad:
+        print(f"# DOCS CHECK FAILED ({len(bad)} broken references):")
+        for msg in bad:
+            print(f"#   {msg}")
+        return 1
+    print("# docs check: all intra-repo references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
