@@ -47,11 +47,14 @@ BASELINE = os.path.join(HERE, "baseline.json")
 # ``readbacks`` pins the one-batched-host-readback-per-step property on
 # every engine row, including the tensor-parallel ``device-sharded``
 # twins (readbacks == steps by construction; a second readback per step
-# would double it).
+# would double it). ``accepted_per_step`` / ``draft_tokens`` pin the
+# speculative-decoding verify program: the spec_mix scenario's self-draft
+# drafter accepts deterministically (>1 token per step, exact float for a
+# fixed seed), and every non-spec row must stay at exactly 0.
 EXACT_SERVING = ("steps", "readbacks", "prefill_compiles", "preemptions",
                  "sched_reorders", "prefix_hit_tokens", "cow_copies",
                  "aborted", "rejected", "failed", "deadline_expired",
-                 "recoveries")
+                 "recoveries", "accepted_per_step", "draft_tokens")
 
 
 def _serving_key(row: dict) -> str:
@@ -86,12 +89,17 @@ def extract(bench: dict) -> dict:
         # (reference rows exist only under --compare and stay ungated)
         if row.get("engine", "device") not in ("device", "device-nocache",
                                                "device-nochaos",
+                                               "device-nospec",
                                                "device-sharded"):
             continue
         slim = {"tok_per_s": round(row["tok_per_s"], 2)}
         for key in EXACT_SERVING:
-            if row.get(key) is not None:
-                slim[key] = int(row[key])
+            v = row.get(key)
+            if v is not None:
+                # accepted_per_step is the one float among the exact
+                # counters (deterministic for a fixed seed; rounded the
+                # same way on both sides of the comparison)
+                slim[key] = round(v, 4) if isinstance(v, float) else int(v)
         out["serving"][_serving_key(row)] = slim
     return out
 
@@ -146,6 +154,21 @@ def compare(current: dict, baseline: dict, *, kernel_tol: float,
                                f"{base[field]} -> {cur.get(field)} "
                                f"(deterministic counter; if intended, "
                                f"refresh baseline.json)")
+            # structural spec gate, independent of the baseline values:
+            # on a spec row that actually drafted, speculation must pay
+            # (>1 committed token per step) without breaking the one-
+            # batched-readback-per-step invariant
+            if "/spec_mix/device" in key and cur.get("draft_tokens"):
+                if cur.get("accepted_per_step", 0) <= 1.0:
+                    bad.append(
+                        f"serving {key}: accepted_per_step "
+                        f"{cur.get('accepted_per_step')} <= 1.0 (the "
+                        f"self-draft verify should accept nearly k+1)")
+                if cur.get("readbacks") != cur.get("steps"):
+                    bad.append(
+                        f"serving {key}: readbacks {cur.get('readbacks')}"
+                        f" != steps {cur.get('steps')} (spec decode must "
+                        f"keep one batched readback per step)")
     return bad
 
 

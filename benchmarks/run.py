@@ -210,6 +210,57 @@ def serving_bench(csv=True, archs=None, mixes=None):
     return [{k: v for k, v in r.items() if k != "streams"} for r in rows]
 
 
+def autotune_spec(csv=True, ks=(1, 2, 4),
+                  path=os.path.join(ART, "spec_autotune.json")):
+    """Sweep the speculative-decoding (drafter, k) search space against
+    end-to-end serving tokens/s (``repro.serving.spec.space``): a
+    half-depth sibling drafts for the qwen2-0.5b smoke target over a
+    fixed ragged prompt mix, every variant is validated bit-identical to
+    the target-only baseline, and the best valid variant wins. Opt-in
+    via ``--autotune-spec`` (CPU serving walls are noisy, so this stays
+    out of the default CI artifact)."""
+    import dataclasses
+
+    import jax
+    from repro import configs
+    from repro.models import registry
+    from repro.serving.spec import space as spec_space
+
+    cfg = configs.smoke("qwen2-0.5b")
+    params, _ = registry.init(cfg, jax.random.PRNGKey(0))
+    dcfg = dataclasses.replace(cfg, name=cfg.name + "-draft",
+                               n_layers=max(1, cfg.n_layers // 2))
+    draft_params, _ = registry.init(dcfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (int(n),), dtype=np.int32)
+               for n in rng.integers(6, 25, 8)]
+    out = spec_space.autotune(params, cfg, prompts,
+                              draft_params=draft_params, draft_cfg=dcfg,
+                              ks=ks)
+    if csv:
+        print("# Spec autotune — (drafter, k) vs serve tokens/s "
+              "(valid = streams bit-identical to target-only)")
+        for r in out["rows"]:
+            print(f"spec_autotune/{r['drafter']}/k{r['k']},"
+                  f"{r['wall_s']*1e6:.0f},tok_s={r['tok_per_s']:.1f},"
+                  f"accepted_per_step={r['accepted_per_step']:.2f},"
+                  f"accept_rate={r['accept_rate']:.2f},"
+                  f"valid={r['valid']}")
+        best = out["best"]
+        if best is None:
+            print("spec_autotune/best,,NONE (every variant diverged — "
+                  "that is a bug, not a tuning result)")
+        else:
+            print(f"spec_autotune/best,,drafter={best['drafter']},"
+                  f"k={best['k']},tok_s={best['tok_per_s']:.1f} "
+                  f"(target-only {best['base_tok_per_s']:.1f})")
+    os.makedirs(ART, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print(f"# spec autotune json -> {path}")
+    return out
+
+
 def bench_json(results=None, *, strategy="greedy", rounds: int = 5,
                path: str = BENCH_JSON, serving=None) -> dict:
     """Machine-readable perf snapshot for cross-PR trajectory tracking:
@@ -307,9 +358,17 @@ def main(argv=None) -> None:
     parser.add_argument("--search-only", action="store_true",
                         help="run only the kernel searches (skip paper "
                              "tables, roofline, and serving benches)")
+    parser.add_argument("--autotune-spec", action="store_true",
+                        help="sweep the speculative-decoding (drafter, k) "
+                             "search space against serve_bench tokens/s "
+                             "and exit (writes artifacts/"
+                             "spec_autotune.json; skips kernel searches)")
     args = parser.parse_args(argv)
 
     os.makedirs(ART, exist_ok=True)
+    if args.autotune_spec:
+        autotune_spec()
+        return
     from repro.core import optimize_all, registered_kernels
     from repro.search import EvalCache, SearchJournal
     paper = ("merge_attn_states_lse", "fused_add_rmsnorm", "silu_and_mul")

@@ -39,8 +39,17 @@ injector, ``survivors_match_nochaos`` asserts surviving streams are
 bit-identical and aborted streams exact prefixes, and the
 ``aborted/rejected/failed/recoveries`` lifecycle counters are
 exact-gated; no host-reference row — the reference engine predates fault
-recovery). Wall times on this host are CPU numbers — a functional
-serving benchmark, not a TPU projection.
+recovery), and ``spec_mix`` (a ragged batch decoded speculatively: a
+self-draft ``draft_model`` drafter — draft params = target params, so
+greedy proposals deterministically match the target and the acceptance
+counters are golden-stable — with ``k=3``; the ``device-nospec`` twin
+runs the identical engine target-only, ``streams_match_nospec`` asserts
+bit-identical streams, and the exact-gated ``accepted_per_step`` /
+``draft_tokens`` / ``accept_rate`` counters pin the fused verify
+program's acceptance behavior; no host-reference row — the reference
+engine IS target-only decoding, which the twin already covers without a
+subprocess cold start). Wall times on this host are CPU numbers — a
+functional serving benchmark, not a TPU projection.
 
 Device rows are driven through the ``LLMEngine`` facade
 (``generate(prompts, sampling_params)``); the host-driven reference rows
@@ -85,6 +94,11 @@ SERVE_JSON = os.path.join(ART, "serve.json")
 DEFAULT_ARCHS = ("qwen2-0.5b", "olmoe-1b-7b")   # two model families
 SLOTS, MAX_SEQ, MAX_NEW, SEED = 4, 128, 8, 0
 
+# (phase label, wall seconds) timings accumulated across the run and
+# printed by --durations — the receipts that twin-only scenarios (chaos/
+# spec) and --skip-reference runs really do skip the reference subprocess
+_DURATIONS: list = []
+
 
 def _mix_lengths(mix: str, rng) -> list[int]:
     if mix == "uniform_short":
@@ -113,16 +127,25 @@ def _mix_lengths(mix: str, rng) -> list[int]:
         # 8 valid requests plus two that admission must reject up front:
         # rid 8 is empty, rid 9 cannot fit max_seq (no room to emit)
         return [int(n) for n in rng.integers(20, 61, 8)] + [0, 200]
+    if mix == "spec_mix":
+        # ragged batch for speculative decoding: enough generation per
+        # request (MIX_MAX_NEW) that variable acceptance spans many steps
+        return [int(n) for n in rng.integers(6, 33, 10)]
     raise KeyError(f"unknown mix {mix!r}; have {sorted(MIXES)}")
 
 
 MIXES = ("uniform_short", "long_tail", "ragged_burst", "oversubscribed",
-         "priority_mix", "shared_prefix", "chaos_mix")
+         "priority_mix", "shared_prefix", "chaos_mix", "spec_mix")
 
 # chaos_mix has no host-reference oracle: the reference engine predates
 # admission validation and fault recovery, so its twin row is instead the
-# SAME device engine run without the injector (see bench_arch)
-MIX_NO_REFERENCE = frozenset({"chaos_mix"})
+# SAME device engine run without the injector (see bench_arch). spec_mix
+# likewise: the reference engine IS the target-only stream, and its
+# device-nospec twin covers that comparison in-process — spinning up the
+# reference subprocess for it would cold-start an oracle nobody consults
+MIX_NO_REFERENCE = frozenset({"chaos_mix", "spec_mix"})
+
+SPEC_K = 3      # spec_mix draft length (verify scores k+1 = 4 positions)
 
 # paged-pool geometry for the oversubscribed mix: 4 slots x 128 max_seq
 # would fully subscribe 32 pages of 16; 12 pages force admission queueing
@@ -138,7 +161,7 @@ MIX_ENGINE_KW = {"oversubscribed": {"page_size": PAGE_SIZE,
                  # chaos runs against an oversubscribed pool so the
                  # injected page seizure actually induces preemption
                  "chaos_mix": {"page_size": PAGE_SIZE, "num_pages": 18}}
-MIX_MAX_NEW = {"oversubscribed": 24, "chaos_mix": 12}
+MIX_MAX_NEW = {"oversubscribed": 24, "chaos_mix": 12, "spec_mix": 16}
 
 
 def _chaos_plan():
@@ -226,6 +249,14 @@ def _metrics_row(wall, toks, ttfts, stats, streams) -> dict:
     for key in ("aborted", "rejected", "failed", "deadline_expired",
                 "recoveries"):
         row[key] = stats.get(key, 0)
+    # speculative-decoding counters, always present (zero when spec is
+    # off or inert) — deterministic under greedy self-draft, so the
+    # regression gate compares them exactly like the lifecycle counters
+    row["spec_on"] = stats.get("spec_on", False)
+    row["accepted_per_step"] = round(stats.get("accepted_per_step", 0.0), 4)
+    row["accepted_tokens"] = stats.get("accepted_tokens", 0)
+    row["draft_tokens"] = stats.get("draft_tokens", 0)
+    row["accept_rate"] = round(stats.get("accept_rate", 0.0), 4)
     # always present (zero when caching is off/unsupported) so the
     # regression gate can compare them uniformly across engines
     row["prefix_cache"] = stats.get("prefix_cache", False)
@@ -318,6 +349,7 @@ def _reference_rows_subprocess(arch: str, mixes, seed: int) -> list[dict]:
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
         out = f.name
+    t0 = time.perf_counter()
     try:
         proc = subprocess.run(
             [sys.executable, os.path.abspath(__file__), "--reference-only",
@@ -330,6 +362,8 @@ def _reference_rows_subprocess(arch: str, mixes, seed: int) -> list[dict]:
         with open(out) as f:
             return json.load(f)
     finally:
+        _DURATIONS.append((f"reference_subprocess/{arch}",
+                           time.perf_counter() - t0))
         os.unlink(out)
 
 
@@ -366,11 +400,30 @@ def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
         if mix == "chaos_mix":
             from repro.serving import ChaosInjector
             chaos = ChaosInjector(_chaos_plan())
-        llm = LLMEngine(params, cfg, chaos=chaos, **kw)
+        spec = None
+        if mix == "spec_mix":
+            # self-draft: the draft model IS the target, so every greedy
+            # proposal matches and acceptance is deterministic (near
+            # k+1 tokens/step) — the strongest golden-stable setting for
+            # exact-gating the verify program. Inert (zero counters) for
+            # non-paged families; the row still runs target-equivalent.
+            from repro.serving import SpecConfig
+            spec = SpecConfig(drafter="draft_model", k=SPEC_K,
+                              draft_params=params, draft_cfg=cfg)
+        llm = LLMEngine(params, cfg, chaos=chaos, spec=spec, **kw)
         reqs = build_requests(cfg, mix, seed=seed)
         row = {"arch": arch, "mix": mix, "engine": "device",
                **run_llm(llm, reqs)}
         rows.append(row)
+        if mix == "spec_mix":
+            # the spec row's oracle: the identical engine target-only —
+            # greedy spec streams must be bitwise identical, just
+            # reached in fewer (exact-gated) steps
+            llm0 = LLMEngine(params, cfg, **kw)
+            row0 = {"arch": arch, "mix": mix, "engine": "device-nospec",
+                    **run_llm(llm0, reqs)}
+            row["streams_match_nospec"] = row["streams"] == row0["streams"]
+            rows.append(row0)
         if mix == "chaos_mix":
             assert chaos.exhausted, "chaos plan failed to fire fully"
             # the chaos row's oracle: the same engine, same requests, no
@@ -415,7 +468,7 @@ def bench_arch(arch: str, mixes=MIXES, *, compare: bool = False,
             if mix == "chaos_mix":
                 from repro.serving import ChaosInjector
                 chaos_s = ChaosInjector(_chaos_plan())
-            llm_s = LLMEngine(params, cfg, chaos=chaos_s,
+            llm_s = LLMEngine(params, cfg, chaos=chaos_s, spec=spec,
                               mesh=sharded_mesh, **kw)
             row_s = {"arch": arch, "mix": mix, "engine": "device-sharded",
                      **run_llm(llm_s, reqs)}
@@ -521,6 +574,12 @@ def print_rows(rows):
             pfx += f",match_nocache={r['streams_match_nocache']}"
         if r.get("streams_match_sharded") is not None:
             pfx += f",match_sharded={r['streams_match_sharded']}"
+        if r.get("spec_on"):
+            pfx += (f",accepted_per_step={r['accepted_per_step']:.2f},"
+                    f"accept_rate={r['accept_rate']:.2f},"
+                    f"draft_tokens={r['draft_tokens']}")
+        if r.get("streams_match_nospec") is not None:
+            pfx += f",match_nospec={r['streams_match_nospec']}"
         if any(r.get(k) for k in ("aborted", "rejected", "failed",
                                   "deadline_expired", "recoveries")):
             pfx += (f",aborted={r['aborted']},rejected={r['rejected']},"
@@ -538,8 +597,11 @@ def bench(archs=DEFAULT_ARCHS, mixes=MIXES, *, compare: bool = False,
           check: bool = False, seed: int = SEED) -> list[dict]:
     rows = []
     for arch in archs:
+        t0 = time.perf_counter()
         rows.extend(bench_arch(arch, mixes, compare=compare, check=check,
                                seed=seed))
+        _DURATIONS.append((f"bench_arch/{arch}",
+                           time.perf_counter() - t0))
     return rows
 
 
@@ -561,6 +623,10 @@ def main(argv=None) -> int:
                     help="skip the host-reference subprocess (fast local "
                          "runs; disables --compare rows and --check's "
                          "stream comparison, golden checks still run)")
+    ap.add_argument("--durations", action="store_true",
+                    help="print per-phase wall timings (device rows per "
+                         "arch, reference subprocesses) — shows what "
+                         "--skip-reference and the twin-only mixes save")
     ap.add_argument("--json", action="store_true",
                     help=f"write rows (sans streams) to {SERVE_JSON}")
     ap.add_argument("--reference-only", action="store_true",
@@ -581,6 +647,13 @@ def main(argv=None) -> int:
                  compare=compare, check=args.check and not
                  args.skip_reference)
     print_rows(rows)
+    if args.durations:
+        print("# durations (phase,wall_s)")
+        for label, secs in _DURATIONS:
+            print(f"# {label},{secs:.2f}")
+        if not any(lbl.startswith("reference_subprocess")
+                   for lbl, _ in _DURATIONS):
+            print("# (no reference subprocess was started)")
     rc = 0
     if args.check:
         # None = no FCFS oracle (reordering scheduler on a slot-coupled
@@ -599,6 +672,14 @@ def main(argv=None) -> int:
             print(f"# STREAM MISMATCH sharded vs single-device: "
                   f"{r['arch']}/{r['mix']}")
         rc |= bool(bad_s)
+        # greedy speculative streams must be bitwise identical to the
+        # target-only twin — a drafter may be slow, never wrong
+        bad_sp = [r for r in rows
+                  if r.get("streams_match_nospec") is False]
+        for r in bad_sp:
+            print(f"# STREAM MISMATCH spec vs target-only: "
+                  f"{r['arch']}/{r['mix']}")
+        rc |= bool(bad_sp)
     if args.check_golden or args.record_golden:
         rc |= not check_golden(rows, record=args.record_golden)
     if args.json:

@@ -20,6 +20,10 @@ CPU-runnable:
     # streams are bit-identical to the single-device run:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.serve --tp 2 --slots 4
+    # speculative decoding (greedy only; streams bit-identical to the
+    # target-only run, in fewer steps):
+    PYTHONPATH=src python -m repro.launch.serve --spec ngram --spec-k 4
+    PYTHONPATH=src python -m repro.launch.serve --spec draft_model
 """
 
 from __future__ import annotations
@@ -32,7 +36,8 @@ import numpy as np
 
 from repro import configs
 from repro.models import registry
-from repro.serving import ChaosInjector, LLMEngine, SamplingParams
+from repro.serving import (ChaosInjector, LLMEngine, SamplingParams,
+                           SpecConfig)
 
 _LIFECYCLE = ("aborted", "rejected", "failed", "deadline_expired",
               "recoveries")
@@ -56,6 +61,21 @@ def parse_chaos(spec: str):
     return faults
 
 
+def _make_spec(spec: str, k: int, cfg, seed: int):
+    """Resolve ``--spec/--spec-k`` into a ``SpecConfig``. The draft model
+    is a shrunk same-arch sibling (half the layers, fresh init key) — a
+    stand-in with the right shape of cost/accept tradeoff, the way
+    qwen2-0.5b would draft for qwen3-8b in production."""
+    if spec == "ngram":
+        return SpecConfig(drafter="ngram", k=k)
+    import dataclasses
+    dcfg = dataclasses.replace(cfg, name=cfg.name + "-draft",
+                               n_layers=max(1, cfg.n_layers // 2))
+    draft_params, _ = registry.init(dcfg, jax.random.PRNGKey(seed + 1))
+    return SpecConfig(drafter="draft_model", k=k,
+                      draft_params=draft_params, draft_cfg=dcfg)
+
+
 def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
         slots: int = 3, max_new: int = 8, max_seq: int = 128,
         prompt_len: int = 16, seed: int = 0, verbose: bool = True,
@@ -63,7 +83,8 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
         prefix_cache: bool = True, scheduler: str = "fcfs",
         temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
         sampling_seed: int | None = None, deadline: float | None = None,
-        chaos: str | None = None, tp: int | None = None):
+        chaos: str | None = None, tp: int | None = None,
+        spec: str | None = None, spec_k: int = 4):
     cfg = configs.smoke(arch) if smoke else configs.get(arch)
     params, _ = registry.init(cfg, jax.random.PRNGKey(seed))
     injector = ChaosInjector(parse_chaos(chaos)) if chaos else None
@@ -71,10 +92,11 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
     if tp is not None:
         from repro.launch.mesh import make_local_mesh
         mesh = make_local_mesh(tp)
+    spec_cfg = _make_spec(spec, spec_k, cfg, seed) if spec else None
     llm = LLMEngine(params, cfg, slots=slots, max_seq=max_seq,
                     scheduler=scheduler, page_size=page_size,
                     num_pages=num_pages, prefix_cache=prefix_cache,
-                    chaos=injector, mesh=mesh)
+                    chaos=injector, mesh=mesh, spec=spec_cfg)
     sp = SamplingParams(temperature=temperature, top_k=top_k, top_p=top_p,
                         seed=sampling_seed)
     rng = np.random.default_rng(seed)
@@ -127,6 +149,12 @@ def run(*, arch: str = "qwen2-0.5b", smoke: bool = True, requests: int = 6,
                   f"peak {s['peak_pages_in_use']}/{s['num_pages']} pages, "
                   f"mean util {s['page_util_mean']:.0%}, "
                   f"frag {s['page_frag_mean']:.0%}")
+        if s.get("spec_on"):
+            print(f"spec decode: {s['spec_drafter']} drafter, "
+                  f"k={s['spec_k']} — "
+                  f"{s['accepted_per_step']:.2f} tokens/step, "
+                  f"{s['accepted_tokens']}/{s['draft_tokens']} drafts "
+                  f"accepted ({s['accept_rate']:.0%})")
         if s.get("prefix_cache"):
             print(f"prefix cache: {s['prefix_hit_tokens']}/"
                   f"{s['prefix_query_tokens']} prompt tokens served from "
@@ -186,6 +214,14 @@ def main():
                     help="model-parallel size: serve sharded over a "
                          "(devices/M, M) (data, model) mesh; streams "
                          "stay bit-identical to the single-device run")
+    ap.add_argument("--spec", default=None,
+                    choices=["ngram", "draft_model"],
+                    help="speculative decoding drafter (greedy only; "
+                         "'draft_model' drafts with a half-depth "
+                         "same-arch sibling)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per decode step "
+                         "(the fused verify scores k+1 positions)")
     args = ap.parse_args()
     run(arch=args.arch, requests=args.requests, slots=args.slots,
         max_new=args.max_new, max_seq=args.max_seq,
@@ -194,7 +230,7 @@ def main():
         scheduler=args.scheduler,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         sampling_seed=args.sampling_seed, deadline=args.deadline,
-        chaos=args.chaos, tp=args.tp)
+        chaos=args.chaos, tp=args.tp, spec=args.spec, spec_k=args.spec_k)
 
 
 if __name__ == "__main__":

@@ -319,13 +319,18 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
 
 
 def decode_step_paged(params, cfg: ModelConfig, pool, page_table, token,
-                      pos, *, seq_shard_axis=None):
+                      pos, *, seq_shard_axis=None, write_mask=None):
     """One decode step over the paged KV pool.
 
     pool: ``{"k","v": [L, num_pages, page, Hkv, dh]}`` global block pool;
     page_table: ``[B, pages_per_slot]`` int32 (physical page of logical page
     ``j`` for slot ``b``; unallocated tail entries point at the engine's
-    trap page). token/pos as in ``decode_step``.
+    trap page). token/pos as in ``decode_step``. ``write_mask`` (``[B]``
+    bool, full slot batch) routes masked-out rows' K/V writes to the trap
+    page instead of their table page — the speculative-decoding verify
+    program uses it so rejected draft positions never touch the pool; the
+    logits math is untouched (a masked row's output is discarded by the
+    caller).
 
     The new token's K/V scatter goes through the table —
     ``(page_table[b, pos//page], pos % page)`` — and attention gathers
@@ -355,6 +360,11 @@ def decode_step_paged(params, cfg: ModelConfig, pool, page_table, token,
     pt_all = tp.gather_data(page_table)     # full table for write indices
     pidx = jnp.clip(pos // page, 0, n_pt - 1)
     phys = pt_all[b_idx, pidx]              # [B] physical page being written
+    if write_mask is not None:
+        # rejected speculative positions write to the trap page: the pool
+        # never sees their K/V rows, at zero extra cost (page 0 absorbs
+        # masked writes by construction)
+        phys = jnp.where(write_mask, phys, 0)
     off = pos % page
     hidden = tp.data_shard(hidden)          # this shard's slot rows
     pos_q = tp.data_shard(pos)

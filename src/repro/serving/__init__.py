@@ -15,6 +15,11 @@ Four public layers, vLLM/SGLang-style, over one device-resident core:
 * ``ChaosInjector`` (``repro.serving.chaos``) — deterministic fault
   injection (device faults, pool exhaustion, corrupt readbacks, stalls,
   aborts) for exercising the request-lifecycle robustness layer.
+* ``SpecConfig`` (``repro.serving.spec``) — speculative decoding fused
+  into the device-resident step: an n-gram or small-draft-model drafter
+  proposes ``k`` tokens, the target verifies all ``k + 1`` positions in
+  one program, rejected KV writes land on the trap page; greedy streams
+  stay bit-identical to target-only decoding.
 
 ``Engine`` is the execution core; ``ReferenceEngine`` is the host-driven
 loop it is proven bit-identical against (greedy FCFS).
@@ -33,13 +38,16 @@ from repro.serving.scheduler import (FCFSScheduler, PreemptionPolicy,
                                      Scheduler, SJFScheduler,
                                      SwapPreemption, make_preemption,
                                      make_scheduler)
+from repro.serving.spec import (DraftModelDrafter, Drafter, NGramDrafter,
+                                SpecConfig)
 
 __all__ = [
     "CacheConfig", "CacheManager", "ChaosInjector",
-    "ContiguousCacheManager", "Engine", "FCFSScheduler",
-    "InjectedDeviceFault", "LLMEngine", "PagedCacheManager",
-    "PreemptionPolicy", "PriorityScheduler", "RecomputePreemption",
-    "ReferenceEngine", "Request", "RequestOutput", "SJFScheduler",
-    "SamplingParams", "Scheduler", "SwapPreemption", "TokenEvent",
+    "ContiguousCacheManager", "DraftModelDrafter", "Drafter", "Engine",
+    "FCFSScheduler", "InjectedDeviceFault", "LLMEngine",
+    "NGramDrafter", "PagedCacheManager", "PreemptionPolicy",
+    "PriorityScheduler", "RecomputePreemption", "ReferenceEngine",
+    "Request", "RequestOutput", "SJFScheduler", "SamplingParams",
+    "Scheduler", "SpecConfig", "SwapPreemption", "TokenEvent",
     "make_preemption", "make_scheduler",
 ]

@@ -45,6 +45,9 @@ class TokenEvent:
     index: int          # 0-based position within the request's output
     done: bool          # True on the request's final event
     finish_reason: Optional[str] = None  # set on the final event only
+    accepted_tokens: int = 0    # cumulative draft tokens the speculative
+                                # verify committed for this request, as of
+                                # this event (0 with spec off)
 
 
 @dataclasses.dataclass
@@ -60,6 +63,8 @@ class RequestOutput:
     preemptions: int = 0
     prefix_hit_tokens: int = 0          # prompt tokens served from the
                                         # radix prefix cache
+    accepted_tokens: int = 0            # draft tokens committed by the
+                                        # speculative verify (0 spec off)
     finish_reason: str = "done"
     error: Optional[str] = None
 
@@ -79,19 +84,22 @@ class LLMEngine:
     ``jax.sharding.Mesh`` (see ``repro.launch.mesh.make_local_mesh``)
     and runs the donated step programs sharded over it via
     ``repro.sharding.tp`` — token streams stay bit-identical to the
-    single-device engine."""
+    single-device engine. ``spec`` takes a
+    ``repro.serving.spec.SpecConfig`` and turns on speculative decoding
+    (greedy requests only; streams stay bit-identical to target-only,
+    just fewer steps)."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  max_seq: int = 512, scheduler="fcfs", preemption="swap",
                  paged: Optional[bool] = None, page_size: int = 16,
                  num_pages: Optional[int] = None, prefix_cache: bool = True,
                  sampling: Optional[SamplingParams] = None, chaos=None,
-                 mesh=None):
+                 mesh=None, spec=None):
         self.cfg = cfg
         self.engine = Engine(
             params, cfg, slots=slots, max_seq=max_seq, sampling=sampling,
             scheduler=scheduler, preemption=preemption, chaos=chaos,
-            mesh=mesh,
+            mesh=mesh, spec=spec,
             cache_manager=CacheConfig(paged=paged, page_size=page_size,
                                       num_pages=num_pages,
                                       prefix_cache=prefix_cache))
@@ -174,14 +182,16 @@ class LLMEngine:
                     yield TokenEvent(
                         rid=req.rid, token=req.out_tokens[i], index=i,
                         done=last,
-                        finish_reason=req.finish_reason if last else None)
+                        finish_reason=req.finish_reason if last else None,
+                        accepted_tokens=req.accepted_tokens)
                 if req.done and req.rid not in closed:
                     # terminal sentinel: the request finished without a
                     # fresh token to carry the done flag
                     closed.add(req.rid)
                     yield TokenEvent(
                         rid=req.rid, token=-1, index=len(req.out_tokens),
-                        done=True, finish_reason=req.finish_reason)
+                        done=True, finish_reason=req.finish_reason,
+                        accepted_tokens=req.accepted_tokens)
 
         steps = max_steps
         while steps > 0 and self.engine.has_work():
@@ -213,6 +223,7 @@ class LLMEngine:
                 tokens=list(req.out_tokens), ttft_s=ttft,
                 preemptions=req.preemptions,
                 prefix_hit_tokens=req.prefix_hit_tokens,
+                accepted_tokens=req.accepted_tokens,
                 finish_reason=req.finish_reason or "done",
                 error=req.error))
         self._release(reqs)

@@ -78,10 +78,15 @@ class CacheManager:
         """Scatter one request's prefill cache into the pool."""
         raise NotImplementedError
 
-    def decode(self, params, cache, token, pos, page_table=None):
-        """One fused decode step over the pool (traced)."""
+    def decode(self, params, cache, token, pos, page_table=None,
+               write_mask=None):
+        """One fused decode step over the pool (traced). ``write_mask``
+        (paged only) routes masked rows' K/V writes to the trap page —
+        the speculative-decoding verify program rejects draft positions
+        through it."""
         return registry.decode_cached(params, self.cfg, cache, token, pos,
-                                      page_table=page_table)
+                                      page_table=page_table,
+                                      write_mask=write_mask)
 
     def read(self, cache, pages):
         """Gather whole pages back into prefill layout (swap-out)."""

@@ -61,6 +61,7 @@ from repro.serving.cache_manager import CacheConfig, make_cache_manager
 from repro.serving.chaos import ChaosInjector
 from repro.serving.sampling import SamplingParams, sample_tokens
 from repro.serving.scheduler import make_preemption, make_scheduler
+from repro.serving.spec import make_drafter
 from repro.sharding import tp
 
 
@@ -113,8 +114,11 @@ class Request:
     # done | aborted | rejected | failed | deadline
     finish_reason: Optional[str] = None
     error: Optional[str] = None         # human-readable failure detail
-    # swap-preemption payload: (host KV pages, token, pos, emitted) — the
-    # victim's exact device state, restored verbatim on re-admission
+    accepted_tokens: int = 0            # draft tokens the spec verify
+                                        # committed (0 with spec off)
+    # swap-preemption payload: (host KV pages, token, pos, emitted,
+    # n_pages, drafter snapshot-or-None) — the victim's exact device
+    # state, restored verbatim on re-admission
     swap_state: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
 
@@ -139,7 +143,7 @@ class Engine:
                  max_seq: int = 512,
                  sampling: Optional[SamplingParams] = None,
                  scheduler=None, preemption=None, cache_manager=None,
-                 chaos=None, mesh=None,
+                 chaos=None, mesh=None, spec=None,
                  greedy: Optional[bool] = None,
                  preempt: Optional[str] = None,
                  paged: Optional[bool] = None,
@@ -157,7 +161,15 @@ class Engine:
         with weights, the paged KV pool, and the slot batch sharded per
         the plan ``repro.sharding.tp`` resolves from the logical-axis
         rules — token streams stay bit-identical to the single-device
-        engine (all collectives are all-gathers).
+        engine (all collectives are all-gathers). ``spec`` takes a
+        ``repro.serving.spec.SpecConfig``: the drafter proposes ``k``
+        tokens per step and the donated step verifies all ``k + 1``
+        positions at once, committing the longest accepted prefix
+        on-device (rejected positions write to the trap page) — still
+        one batched host readback per step, and greedy streams bitwise
+        identical to target-only decoding. Like
+        ``CacheConfig.prefix_cache`` it is silently inert where it
+        cannot run (contiguous cache managers, frame frontends).
 
         ``greedy=``, ``preempt=``, and ``paged=``/``page_size=``/
         ``num_pages=`` are the pre-layered kwargs, kept as deprecation
@@ -247,6 +259,24 @@ class Engine:
         if self.paged:
             # swap-in restore; compile key = saved page count (<= n_pt)
             self._restore_fn = self._jit_restore()
+        # speculative decoding: active only where the paged pool (trap
+        # page for rejected writes) and token prompts exist — silently
+        # inert elsewhere, mirroring CacheConfig.prefix_cache. ``spec``
+        # is the EFFECTIVE config (None when inert); ``spec_config`` the
+        # requested one, kept so stats always surface the spec counters.
+        self.spec_config = spec
+        self.spec = None
+        self._drafter = None
+        if spec is not None and self.paged and cfg.frontend != "frames":
+            self.spec = spec
+            self._drafter = make_drafter(spec, cfg, slots, max_seq,
+                                         dev=self._dev)
+            # the fused draft-verify step: k+1 sequential inner decode
+            # steps in ONE donated program (greedy-only by construction
+            # — non-greedy requests are rejected at admission)
+            self._spec_step_fn = self._jit_step_spec()
+        self._spec_slot_steps = 0   # active-slot spec dispatches
+        self._spec_emitted = 0      # tokens committed by spec steps
         self._prefix_cache = self.paged and self.cm.prefix_cache \
             and self._pad_ok
         if self._prefix_cache:
@@ -413,6 +443,77 @@ class Engine:
                 return body(params, cache, token, pos, active, emitted,
                             max_new, keys, temp, topk, topp)
         return fused
+
+    def _jit_step_spec(self):
+        """jit (or jit(shard_map)) of the fused draft-verify step. Same
+        donation tuple and carry layout as the plain step; ``drafts``
+        rides replicated like the sampling-parameter buffers, and the
+        emit pair widens to ``([B, k+1] tokens, [B] done)``."""
+        fn = self._make_step_spec()
+        donate = (1, 2, 3, 4, 5, 7)
+        if self._plan is None:
+            return jax.jit(fn, donate_argnums=donate)
+        rep, kv = P(), tp.kv_specs(self._plan)
+        pt = P("data", None) if self._plan.batch else rep
+        in_specs = (self._pspecs, kv) + (rep,) * 9 + (pt, rep)
+        out_specs = (kv, rep, rep, rep, rep, rep, (rep, rep))
+        return tp.wrap(self._plan, fn, in_specs, out_specs, donate)
+
+    def _make_step_spec(self):
+        """Draft-k-verify-once fused into one program: ``k + 1``
+        sequential inner decode steps score the carry token and every
+        draft position, acceptance is computed on-device, and each inner
+        step's KV write is masked by its own commit flag — rejected
+        positions land on the trap page, so the paged pool never sees a
+        rejected token.
+
+        Inner step ``j`` feeds ``x_j`` (``x_0`` = the carry token,
+        ``x_j`` = draft ``j``) at position ``pos + j`` — the exact
+        computation the plain step would run at that point — and emits
+        ``t_j = argmax``. Draft ``j`` is accepted while every earlier
+        draft was and it equals ``t_{j-1}`` (the token the target just
+        emitted), so commit flags are prefix-contiguous and the
+        committed stream is bitwise identical to target-only decoding.
+        ``j < budget`` caps commits at the request's remaining token /
+        sequence budget, mirroring the host's page lookahead. The new
+        carry is the last committed ``t_j``; pos/emitted advance by the
+        per-slot acceptance count ``e`` in [1, k+1]."""
+        vocab, max_seq = self.cfg.vocab, self.max_seq
+        cm, k = self.cm, self.spec.k
+
+        def spec_step(params, cache, token, pos, active, emitted,
+                      max_new, keys, temp, topk, topp, page_table,
+                      drafts):
+            budget = jnp.minimum(max_new - emitted, (max_seq - 1) - pos)
+            flag = active               # flag_0: the carry always commits
+            x = carry = token
+            prev_t = token
+            emits, commits = [], []
+            for j in range(k + 1):
+                if j > 0:
+                    d_j = drafts[:, j - 1]
+                    flag = flag & (d_j == prev_t) & (j < budget)
+                    x = d_j
+                logits, cache = cm.decode(params, cache, x, pos + j,
+                                          page_table, write_mask=flag)
+                t_j = jnp.argmax(logits[:, :vocab], axis=-1) \
+                    .astype(jnp.int32)
+                t_j = tp.gather_data(t_j)
+                carry = jnp.where(flag, t_j, carry)
+                emits.append(jnp.where(flag, t_j, -1))
+                commits.append(flag)
+                prev_t = t_j
+            e = sum(c.astype(jnp.int32) for c in commits)
+            new_pos = pos + e
+            new_emitted = emitted + e
+            done = active & ((new_emitted >= max_new)
+                             | (new_pos >= max_seq - 1))
+            new_active = active & ~done
+            emit_tok = jnp.stack(emits, axis=1)          # [B, k+1]
+            return (cache, carry, new_pos, new_active, new_emitted,
+                    keys, (emit_tok, done))
+
+        return spec_step
 
     def _make_admit(self, greedy_only: bool):
         cfg, vocab = self.cfg, self.cfg.vocab
@@ -591,6 +692,13 @@ class Engine:
         if n > self.max_seq - 1:
             return (f"prompt length {n} cannot fit max_seq={self.max_seq} "
                     "(no room to emit a token)")
+        if self.spec is not None:
+            sp = req.sampling if req.sampling is not None \
+                else self.default_sampling
+            if not sp.greedy:
+                return ("speculative decoding verifies drafts against "
+                        "the greedy (argmax) target stream; non-greedy "
+                        "sampling cannot serve with spec enabled")
         return self.cm.infeasible(n)
 
     def _finish(self, req: Request, reason: str,
@@ -728,7 +836,7 @@ class Engine:
         """Swap-in re-admission: restore the victim's saved pages + device
         state byte-for-byte (no prefill, no token emitted). False when the
         pool cannot hold the pages yet (head-of-line waits)."""
-        saved, tok, dpos, demitted, n_real = req.swap_state
+        saved, tok, dpos, demitted, n_real, draft_saved = req.swap_state
         if not self.cm.restore(i, n_real):
             return False
         self.scheduler.pop()
@@ -746,6 +854,11 @@ class Engine:
         (self.cache, self._token, self._pos, self._active, self._emitted,
          self._max_new, self._keys, self._temp, self._topk,
          self._topp) = out
+        if draft_saved is not None and self._drafter is not None:
+            # drafter state comes back byte-for-byte with the target's
+            # pages, so the restored stream's draft proposals replay
+            # exactly as an undisturbed run's would
+            self._drafter.restore_slot(i, draft_saved)
         req.swap_state = None
         slot.req = req
         slot.dpos = dpos
@@ -754,7 +867,7 @@ class Engine:
         return True
 
     def _dispatch_restore(self, i: int, req: Request, sp, pages):
-        saved, tok, dpos, demitted, _ = req.swap_state
+        saved, tok, dpos, demitted = req.swap_state[:4]
         with _quiet_donation():
             return self._restore_fn(
                 self.cache, self._token, self._pos, self._active,
@@ -828,11 +941,20 @@ class Engine:
                         (self.cache, self._token, self._pos, self._active,
                          self._emitted, self._max_new, self._keys,
                          self._temp, self._topk, self._topp, tok0) = out
+                    if self._drafter is not None:
+                        # the drafter mirrors the FULL prompt (generated
+                        # prefix included on recompute re-admission, the
+                        # radix-served prefix included on suffix hits —
+                        # the draft cache has no page sharing), so its
+                        # carry invariant matches the target's exactly
+                        self._drafter.prefill(i, prompt[:n])
                 except RuntimeError as e:
                     # failure isolation: a faulted prefill (XLA launch /
                     # runtime error) fails this request alone — its
                     # admission hold rolls back and the slot refills on
-                    # the next step
+                    # the next step (deactivated in case the fault hit
+                    # after the target admit already marked it active)
+                    self._active = self._active.at[i].set(False)
                     self.cm.evict(i)
                     self._finish(req, "failed", f"prefill fault: {e}")
                     continue
@@ -919,10 +1041,12 @@ class Engine:
         if self.preemption.mode == "swap":
             owned = self.cm.pages_of(victim)
             saved = self.cm.read(self.cache, jnp.asarray(owned))
+            draft_saved = self._drafter.snapshot_slot(victim) \
+                if self._drafter is not None else None
             req.swap_state = (
                 jax.tree.map(np.asarray, saved),      # host copy (swap out)
                 int(np.asarray(self._token)[victim]),
-                slot.dpos, slot.demitted, len(owned))
+                slot.dpos, slot.demitted, len(owned), draft_saved)
         self.cm.evict(victim)
         slot.req = None
         slot.dactive = False
@@ -936,12 +1060,21 @@ class Engine:
         position storage-backed. On pool exhaustion: settle the in-flight
         step (finished slots free pages), then let the preemption policy
         pick a victim (youngest occupant by default) until the write
-        fits."""
+        fits. Under speculative decoding a step may commit up to ``k+1``
+        positions, so the lookahead covers the slot's worst-case commit
+        (capped by its remaining token/sequence budget — the device's
+        ``j < budget`` commit gate mirrors exactly this bound, so no
+        committed write can ever land on an unbacked page)."""
         for i in range(self.n_slots):
             slot = self.slots[i]
             if slot.req is None or not slot.dactive:
                 continue
-            while not self.cm.backed(i, slot.dpos):
+            need = 1
+            if self.spec is not None:
+                budget = min(slot.req.max_new_tokens - slot.demitted,
+                             (self.max_seq - 1) - slot.dpos)
+                need = max(1, min(self.spec.k + 1, budget))
+            while not self.cm.backed(i, slot.dpos + need - 1):
                 if self.cm.grow(i):
                     continue
                 self._drain()
@@ -1019,10 +1152,14 @@ class Engine:
                     # survivor's stream bit-identical
                     owned = self.cm.pages_of(i)
                     saved = self.cm.read(self.cache, jnp.asarray(owned))
+                    draft_saved = (
+                        self._drafter.snapshot_slot(i)
+                        if self._drafter is not None
+                        and self._drafter.stateful else None)
                     req.swap_state = (
                         jax.tree.map(np.asarray, saved),
                         int(np.asarray(self._token)[i]),
-                        slot.dpos, slot.demitted, len(owned))
+                        slot.dpos, slot.demitted, len(owned), draft_saved)
                 except RuntimeError:
                     req.swap_state = None   # carry died with the fault
             if req.swap_state is None \
@@ -1054,6 +1191,11 @@ class Engine:
         # retrace, and mesh placements survive the recovery)
         self.cache = self._put_cache(self.cm.init())
         self._fresh_carries()
+        if self._drafter is not None:
+            # the draft cache shares the device that faulted: drop it and
+            # replay survivors' drafter rows from their snapshots on
+            # re-admission (byte-for-byte, like the target pages)
+            self._drafter.reset()
         self.recoveries += 1
 
     # -- one engine step -----------------------------------------------------
@@ -1106,9 +1248,18 @@ class Engine:
         args += tuple(jnp.asarray(x) for x in self.cm.step_extra())
         try:
             if self.chaos is not None:
+                # BEFORE the draft propose: an injected fault then leaves
+                # the drafter's donated cache unconsumed, exactly like the
+                # target carries
                 self.chaos.pre_dispatch(self, step_no)
-            with _quiet_donation():
-                out = self._step_fn(*args)
+            if self.spec is not None:
+                drafts = self._drafter.propose(self.slots, self._token,
+                                               self._pos)
+                with _quiet_donation():
+                    out = self._spec_step_fn(*args, jnp.asarray(drafts))
+            else:
+                with _quiet_donation():
+                    out = self._step_fn(*args)
         except RuntimeError as e:     # XlaRuntimeError subclasses this
             self._recover_step_fault(e)
             return True
@@ -1117,6 +1268,15 @@ class Engine:
         if self.chaos is not None:
             emit = self.chaos.filter_emit(step_no, emit)
         self._steps += 1
+        if self.spec is not None:
+            # variable acceptance: the host shadows can only advance from
+            # the actual commit counts, so spec mode settles every step
+            # immediately (no readback overlap). The one-batched-readback-
+            # per-step invariant is untouched — exactly one _apply_spec per
+            # dispatched step, and readbacks == steps stays exact-gated.
+            self._apply_spec((emit, [s.req for s in self.slots]))
+            self._sample_page_stats()
+            return True
         # mirror the device's deterministic stop conditions on the host
         # shadows (the readback of this step is still in flight)
         for s in self.slots:
@@ -1201,6 +1361,66 @@ class Engine:
                     # writes to the trap page; its pages are safe to reuse
                     self.cm.evict(i)
 
+    def _apply_spec(self, pending):
+        """Settle a spec step: ONE batched readback of the ``[slots,
+        k+1]`` commit matrix + done flags; each slot's host shadows then
+        advance by its actual acceptance count. Commit rows are prefix-
+        contiguous by construction (-1 past the accepted prefix), so the
+        committed tokens are ``row[row != -1]`` and the per-request
+        ordering matches target-only decoding bit for bit."""
+        (emit_tok, done), reqs = pending
+        self._readbacks += 1
+        tok = np.asarray(emit_tok)
+        fin = np.asarray(done)
+        for i, req in enumerate(reqs):
+            if req is None or req.done:
+                continue
+            row = tok[i]
+            committed = row[row != -1]
+            if committed.size == 0:
+                continue        # slot idle this step: nothing committed
+            if ((committed < 0) | (committed >= self.cfg.vocab)).any():
+                # corrupt/NaN readback: quarantine this request only (the
+                # plain path's contract — other slots' device state is
+                # untouched and their streams continue undisturbed)
+                if self.slots[i].req is req:
+                    self.slots[i].req = None
+                    self.slots[i].dactive = False
+                    self._active = self._active.at[i].set(False)
+                    self.cm.evict(i)
+                bad = int(committed[
+                    (committed < 0) | (committed >= self.cfg.vocab)][0])
+                self._finish(req, "failed",
+                             f"corrupt readback: token {bad} outside "
+                             f"[0, {self.cfg.vocab})")
+                continue
+            e = int(committed.size)
+            self._spec_slot_steps += 1
+            self._spec_emitted += e
+            req.accepted_tokens += e - 1    # e = 1 carry + (e-1) drafts
+            req.out_tokens.extend(int(t) for t in committed)
+            slot = self.slots[i]
+            if slot.req is req and slot.dactive:
+                slot.demitted += e
+                slot.dpos += e
+                if (slot.demitted >= req.max_new_tokens
+                        or slot.dpos >= self.max_seq - 1):
+                    slot.dactive = False
+            if fin[i]:
+                self._finish(req, "done")
+                if slot.req is req:
+                    if self._prefix_cache:
+                        # identical coverage rule to the plain path: stop
+                        # one short of the end — the final committed
+                        # token's KV row was never written
+                        prompt = np.asarray(req.prompt)
+                        toks = np.concatenate(
+                            [prompt,
+                             np.asarray(req.out_tokens, prompt.dtype)])
+                        self.cm.insert_prompt(i, toks, len(toks) - 1)
+                    slot.req = None
+                    self.cm.evict(i)
+
     def run(self, max_steps: int = 10_000):
         while max_steps > 0 and self.has_work():
             if not self.step():
@@ -1242,6 +1462,21 @@ class Engine:
             "recoveries": self.recoveries,
         }
         out.update(self.scheduler.stats())
+        if self.spec_config is not None:
+            # surfaced whenever spec was REQUESTED — an inert config
+            # (contiguous cache, frames frontend) reports zeros, so the
+            # bench twin rows stay shape-stable either way
+            ss, emitted = self._spec_slot_steps, self._spec_emitted
+            draft_tokens = ss * self.spec_config.k
+            accepted = emitted - ss
+            out["spec_on"] = self.spec is not None
+            out["spec_drafter"] = self.spec_config.drafter
+            out["spec_k"] = self.spec_config.k
+            out["draft_tokens"] = draft_tokens
+            out["accepted_tokens"] = accepted
+            out["accepted_per_step"] = emitted / ss if ss else 0.0
+            out["accept_rate"] = \
+                accepted / draft_tokens if draft_tokens else 0.0
         if self._plan is not None:
             out["mesh"] = self._plan.describe()
         if self.chaos is not None:

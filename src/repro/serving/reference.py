@@ -25,7 +25,8 @@ class ReferenceEngine:
     """Host-driven greedy oracle pinning the pre-refactor token streams."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 max_seq: int = 512, greedy: bool = True, sampling=None):
+                 max_seq: int = 512, greedy: bool = True, sampling=None,
+                 spec=None):
         # the oracle is greedy-only BY DESIGN: it pins the pre-refactor
         # argmax streams. ``sampling`` is accepted for signature parity
         # with Engine but must describe greedy decoding.
@@ -33,6 +34,14 @@ class ReferenceEngine:
             raise ValueError("ReferenceEngine is the greedy (argmax) "
                              "oracle; non-greedy streams have no "
                              "host-driven reference")
+        # ``spec`` is likewise signature parity only: the oracle IS the
+        # target-only stream speculative decoding must reproduce, so a
+        # drafter has nothing to add and plenty to confuse
+        if spec is not None:
+            raise ValueError("ReferenceEngine is the target-only oracle "
+                             "speculative streams are checked against; "
+                             "SpecConfig has no host-driven reference "
+                             "(pass spec=None)")
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_seq = slots, max_seq
         self.slots = [_Slot() for _ in range(slots)]

@@ -1,0 +1,19 @@
+"""Speculative decoding fused into the device-resident decode step.
+
+``SpecConfig`` names a drafter (``"ngram"`` prompt-lookup self-drafting
+or ``"draft_model"``) and a draft length ``k``; the serving engine
+resolves it through ``make_drafter`` and verifies all ``k + 1``
+positions inside its single donated step program — per-slot variable
+acceptance on-device, rejected positions' KV writes routed to the trap
+page, still exactly one batched host readback per step. Greedy spec
+streams are bitwise identical to target-only decoding. ``space``
+registers (drafter, k) as a search space ``benchmarks/run.py`` can
+autotune against serve_bench tokens/s.
+"""
+
+from repro.serving.spec.config import DRAFTERS, SpecConfig
+from repro.serving.spec.drafter import (Drafter, DraftModelDrafter,
+                                        NGramDrafter, make_drafter)
+
+__all__ = ["DRAFTERS", "SpecConfig", "Drafter", "DraftModelDrafter",
+           "NGramDrafter", "make_drafter"]

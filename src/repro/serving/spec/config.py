@@ -1,0 +1,62 @@
+"""``SpecConfig`` — the declarative speculative-decoding knob set.
+
+``SamplingParams``-adjacent: a frozen config the caller hands to
+``LLMEngine(spec=...)`` / ``Engine(spec=...)`` (or builds from
+``launch/serve.py --spec/--spec-k``). It names the drafter
+(``"ngram"`` self-drafting or ``"draft_model"`` with a small dense
+draft model), the draft length ``k``, and the drafter's own knobs; the
+engine resolves it into a ``repro.serving.spec.drafter.Drafter`` via
+``make_drafter`` and fuses verify/accept/rollback into the donated
+decode step. Like ``CacheConfig.prefix_cache``, the config is silently
+inert where the subsystem cannot run (contiguous cache managers, frame
+frontends): the engine then serves target-only with zero spec counters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+DRAFTERS = ("ngram", "draft_model")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SpecConfig:
+    """Speculative-decoding configuration for the serving engine.
+
+    drafter: ``"ngram"`` (prompt-lookup self-drafting from the request's
+        own prompt + emitted history — no extra model, no device state)
+        or ``"draft_model"`` (a small dense draft model with its own
+        contiguous KV state, rolled back on rejection).
+    k: draft length — tokens proposed per decode step; the fused verify
+        program scores all ``k + 1`` positions at once, so each step
+        commits between 1 and ``k + 1`` tokens.
+    ngram: maximum match length the n-gram drafter looks up (it backs
+        off toward 1 until the trailing n-gram recurs).
+    draft_params / draft_cfg: the draft model's weights and
+        ``ModelConfig`` (``drafter="draft_model"`` only). The draft
+        vocab must cover the target vocab — proposals are target-vocab
+        token ids.
+    """
+
+    drafter: str = "ngram"
+    k: int = 4
+    ngram: int = 3
+    draft_params: Optional[Any] = dataclasses.field(
+        default=None, repr=False)
+    draft_cfg: Optional[Any] = None
+
+    def __post_init__(self):
+        """Reject unusable configurations up front (typed, not traced)."""
+        if self.drafter not in DRAFTERS:
+            raise ValueError(f"drafter={self.drafter!r} must be one of "
+                             f"{DRAFTERS}")
+        if self.k < 1:
+            raise ValueError(f"k={self.k} must be >= 1 (propose at least "
+                             "one draft token)")
+        if self.ngram < 1:
+            raise ValueError(f"ngram={self.ngram} must be >= 1")
+        if self.drafter == "draft_model" and (
+                self.draft_params is None or self.draft_cfg is None):
+            raise ValueError("drafter='draft_model' needs draft_params= "
+                             "and draft_cfg= (the small draft model)")

@@ -1,0 +1,127 @@
+"""Search space over speculative-decoding knobs: (drafter, k).
+
+The Astra loop treats optimization moves as a searchable strategy set;
+this module gives it the serving-level analogue for speculative
+decoding. A ``SpecVariant`` names one point of the space, ``evaluate``
+scores it by *end-to-end serving throughput* — an in-process mini
+serve_bench run over a fixed request mix — and ``autotune`` sweeps the
+space and returns the best valid variant. Validity is the subsystem's
+acceptance oracle: a variant only counts if its greedy streams are
+bitwise identical to the target-only baseline (a drafter can be slow,
+never wrong). ``benchmarks/run.py --autotune-spec`` drives this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+from repro.serving.spec.config import DRAFTERS, SpecConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecVariant:
+    """One point of the spec search space: drafter choice + draft len."""
+
+    drafter: str
+    k: int
+
+    def to_config(self, draft_params=None, draft_cfg=None) -> SpecConfig:
+        """The ``SpecConfig`` this variant resolves to (draft model
+        weights attached for the ``"draft_model"`` drafter)."""
+        if self.drafter == "draft_model":
+            return SpecConfig(drafter=self.drafter, k=self.k,
+                              draft_params=draft_params,
+                              draft_cfg=draft_cfg)
+        return SpecConfig(drafter=self.drafter, k=self.k)
+
+
+def enumerate_variants(ks: Sequence[int] = (1, 2, 3, 4, 6),
+                       drafters: Sequence[str] = DRAFTERS,
+                       *, with_draft_model: bool = True):
+    """The swept (drafter, k) grid; drop draft-model points when no
+    draft weights are available."""
+    out = []
+    for d in drafters:
+        if d == "draft_model" and not with_draft_model:
+            continue
+        for k in ks:
+            out.append(SpecVariant(drafter=d, k=k))
+    return out
+
+
+def _serve(params, cfg, prompts, spec, *, slots, max_seq, max_new,
+           page_size, seed_streams=None):
+    """One in-process serving run; returns (streams, wall_s, stats)."""
+    from repro.serving.api import LLMEngine
+    eng = LLMEngine(params, cfg, slots=slots, max_seq=max_seq,
+                    page_size=page_size, spec=spec)
+    t0 = time.perf_counter()
+    outs = eng.generate(prompts, max_new_tokens=max_new)
+    wall = time.perf_counter() - t0
+    return [o.tokens for o in outs], wall, eng.stats()
+
+
+def evaluate(params, cfg, variant: SpecVariant, prompts, *,
+             draft_params=None, draft_cfg=None, slots: int = 4,
+             max_seq: int = 128, max_new: int = 16, page_size: int = 16,
+             baseline: Optional[tuple] = None) -> dict:
+    """Score one variant against the target-only baseline.
+
+    Returns a row with ``tok_per_s``, the spec counters, and ``valid``
+    (greedy streams bitwise identical to target-only). Pass
+    ``baseline=(streams, wall_s)`` to share one target-only run across
+    a sweep; omitted, the baseline is run here.
+    """
+    if baseline is None:
+        baseline = _serve(params, cfg, prompts, None, slots=slots,
+                          max_seq=max_seq, max_new=max_new,
+                          page_size=page_size)[:2]
+    base_streams, base_wall = baseline
+    spec = variant.to_config(draft_params=draft_params,
+                             draft_cfg=draft_cfg)
+    streams, wall, stats = _serve(params, cfg, prompts, spec,
+                                  slots=slots, max_seq=max_seq,
+                                  max_new=max_new, page_size=page_size)
+    toks = sum(len(s) for s in streams)
+    return {
+        "drafter": variant.drafter,
+        "k": variant.k,
+        "tok_per_s": toks / max(wall, 1e-9),
+        "base_tok_per_s": sum(len(s) for s in base_streams)
+        / max(base_wall, 1e-9),
+        "wall_s": wall,
+        "steps": stats["steps"],
+        "accepted_per_step": stats.get("accepted_per_step", 0.0),
+        "accept_rate": stats.get("accept_rate", 0.0),
+        "draft_tokens": stats.get("draft_tokens", 0),
+        "valid": streams == base_streams,
+    }
+
+
+def autotune(params, cfg, prompts, *, draft_params=None, draft_cfg=None,
+             ks: Sequence[int] = (1, 2, 3, 4, 6),
+             slots: int = 4, max_seq: int = 128, max_new: int = 16,
+             page_size: int = 16) -> dict:
+    """Sweep the (drafter, k) grid against serve tokens/s.
+
+    Returns ``{"rows": [...], "best": row | None}`` — ``best`` is the
+    highest-throughput *valid* variant (bit-identical streams), or None
+    when every variant is invalid (which is itself a red flag the
+    caller should surface).
+    """
+    base = _serve(params, cfg, prompts, None, slots=slots,
+                  max_seq=max_seq, max_new=max_new,
+                  page_size=page_size)[:2]
+    rows = []
+    for v in enumerate_variants(ks=ks,
+                                with_draft_model=draft_params is not None):
+        rows.append(evaluate(params, cfg, v, prompts,
+                             draft_params=draft_params,
+                             draft_cfg=draft_cfg, slots=slots,
+                             max_seq=max_seq, max_new=max_new,
+                             page_size=page_size, baseline=base))
+    valid = [r for r in rows if r["valid"]]
+    best = max(valid, key=lambda r: r["tok_per_s"]) if valid else None
+    return {"rows": rows, "best": best}

@@ -1,0 +1,346 @@
+"""Speculative-decoding tests: greedy spec streams bit-identical to
+target-only decoding for both drafters, composed with every serving
+subsystem — forced swap preemption (stateful draft-cache snapshot and
+byte-for-byte restore), radix prefix-cache hits, abort mid-burst, and an
+injected device fault with crash-consistent drafter recovery — plus the
+SpecConfig/admission/reference validation surface and the inert-config
+behavior on cache layouts that cannot speculate."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import registry
+from repro.reliability import Fault
+from repro.serving import SpecConfig
+from repro.serving.api import LLMEngine
+from repro.serving.cache_manager import CacheConfig
+from repro.serving.chaos import ChaosInjector
+from repro.serving.engine import Engine, Request
+from repro.serving.reference import ReferenceEngine
+from repro.serving.sampling import SamplingParams
+from repro.serving.spec import DRAFTERS, make_drafter
+from repro.serving.spec.drafter import DraftModelDrafter, NGramDrafter
+
+_STATE = {}
+
+
+def _setup(arch="qwen2-0.5b"):
+    if arch not in _STATE:
+        cfg = configs.smoke(arch)
+        _STATE[arch] = (cfg, registry.init(cfg, jax.random.PRNGKey(0))[0])
+    return _STATE[arch]
+
+
+def _spec(cfg, params, drafter, k=3):
+    """A SpecConfig for tests: self-drafting with the target model itself
+    (every draft accepted — the strongest exactness stressor, since the
+    verify rolls through full k+1 commits), or prompt-lookup n-grams."""
+    if drafter == "draft_model":
+        return SpecConfig(drafter="draft_model", k=k, draft_params=params,
+                          draft_cfg=cfg)
+    return SpecConfig(drafter="ngram", k=k)
+
+
+def _prompts(cfg, n=4, length=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (length,), dtype=np.int32)
+            for _ in range(n)]
+
+
+def _run(cfg, params, prompts, *, max_new=8, slots=2, max_seq=64, **kw):
+    eng = Engine(params, cfg, slots=slots, max_seq=max_seq, **kw)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p.copy(),
+                           max_new_tokens=max_new))
+    eng.run()
+    return eng, {r.rid: list(r.out_tokens) for r in eng.finished}
+
+
+# -- bit-identity vs target-only ---------------------------------------------
+
+@pytest.mark.parametrize("drafter", DRAFTERS)
+def test_spec_streams_bit_identical(drafter):
+    """The headline guarantee: greedy spec streams equal target-only
+    streams token for token, with exactly one readback per step."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, n=6, length=14, seed=1)
+    _, gold = _run(cfg, params, prompts, slots=3)
+    eng, out = _run(cfg, params, prompts, slots=3,
+                    spec=_spec(cfg, params, drafter))
+    assert out == gold
+    s = eng.stats()
+    assert s["spec_on"] and s["spec_drafter"] == drafter
+    assert s["readbacks"] == s["steps"]
+    assert s["draft_tokens"] > 0 and s["accepted_tokens"] >= 0
+
+
+def test_self_draft_accepts_nearly_all():
+    """Self-drafting with the target model must accept almost every draft
+    (only budget clipping at stream tails loses tokens), so decode takes
+    far fewer steps than target-only."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, n=4, length=10, seed=2)
+    plain, gold = _run(cfg, params, prompts, max_new=12)
+    eng, out = _run(cfg, params, prompts, max_new=12,
+                    spec=_spec(cfg, params, "draft_model", k=3))
+    assert out == gold
+    s = eng.stats()
+    assert s["accepted_per_step"] > 1.0
+    assert 0.0 < s["accept_rate"] <= 1.0
+    assert s["steps"] < plain.stats()["steps"]
+
+
+def test_spec_exact_max_new_budget():
+    """Variable acceptance must stop at exactly the same token count as
+    target-only decoding for every budget — the on-device clamp cannot
+    overshoot on the final partial step (k=4 > several of the budgets)."""
+    cfg, params = _setup()
+    for max_new in (1, 2, 5, 7):
+        prompts = _prompts(cfg, n=3, seed=3)
+        _, gold = _run(cfg, params, prompts, max_new=max_new)
+        eng, out = _run(cfg, params, prompts, max_new=max_new,
+                        spec=_spec(cfg, params, "draft_model", k=4))
+        assert out == gold
+        assert all(len(v) == max(max_new, 2) for v in out.values())
+        assert eng.stats()["readbacks"] == eng.stats()["steps"]
+
+
+# -- composition with the serving subsystems ---------------------------------
+
+@pytest.mark.parametrize("drafter", DRAFTERS)
+def test_spec_bit_identical_under_forced_preemption(drafter):
+    """Oversubscribed pool: requests are swap-evicted mid-generation and
+    readmitted — the drafter state (contiguous KV rows for draft_model)
+    must survive the round-trip, streams staying bit-identical."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, n=5, length=26, seed=4)
+    kw = dict(max_new=16, slots=3, max_seq=64,
+              cache_manager=CacheConfig(page_size=16, num_pages=6))
+    _, gold = _run(cfg, params, prompts, **kw)
+    eng, out = _run(cfg, params, prompts,
+                    spec=_spec(cfg, params, drafter), **kw)
+    assert eng.stats()["preemptions"] >= 1
+    assert out == gold
+    eng._pool.check()
+
+
+def test_spec_prefix_cache_hits_stay_exact():
+    """Shared-prefix prompts under spec: the radix cache must land hits
+    (insertion covers only committed tokens) and streams must equal the
+    spec-less cached run."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    head = rng.integers(0, cfg.vocab, (17,), dtype=np.int32)
+    prompts = [np.concatenate([head, rng.integers(0, cfg.vocab, (t,),
+                                                  dtype=np.int32)])
+               for t in (3, 5, 7, 4)]
+    kw = dict(max_new=8, slots=2, max_seq=64,
+              cache_manager=CacheConfig(page_size=16, num_pages=12))
+    _, gold = _run(cfg, params, prompts, **kw)
+    eng, out = _run(cfg, params, prompts,
+                    spec=_spec(cfg, params, "draft_model"), **kw)
+    assert eng.stats()["prefix_hit_tokens"] > 0
+    assert out == gold
+    eng._pool.check()
+
+
+def test_spec_abort_mid_burst_is_prefix_exact():
+    """Aborting a resident request between spec steps frees its pages and
+    leaves survivors bit-identical; the aborted stream is a committed
+    prefix of its undisturbed run."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, n=3, length=12, seed=6)
+    _, gold = _run(cfg, params, prompts, max_new=10, slots=3)
+    eng = Engine(params, cfg, slots=3, max_seq=64,
+                 spec=_spec(cfg, params, "draft_model"))
+    rs = [Request(rid=i, prompt=p.copy(), max_new_tokens=10)
+          for i, p in enumerate(prompts)]
+    for r in rs:
+        eng.submit(r)
+    for _ in range(2):
+        eng.step()
+    assert eng.abort(1)
+    eng.run()
+    reasons = {r.rid: r.finish_reason for r in rs}
+    assert reasons == {0: "done", 1: "aborted", 2: "done"}
+    assert list(rs[0].out_tokens) == gold[0]
+    assert list(rs[2].out_tokens) == gold[2]
+    n = len(rs[1].out_tokens)
+    assert 0 < n < 10 and list(rs[1].out_tokens) == gold[1][:n]
+    assert eng.stats()["aborted"] == 1
+    eng._pool.check()
+    assert all(not pages for pages in eng._pool.owned)
+
+
+def test_spec_device_fault_recovery_restores_drafter_state():
+    """Injected device fault mid-spec-decode: the faulting slot is
+    quarantined, survivors are swap-restored AND the stateful drafter's
+    per-slot cache rows are restored byte-for-byte (every restore_slot
+    round-trips through snapshot_slot exactly), streams finishing
+    bit-identical to an undisturbed run."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, n=4, length=18, seed=7)
+    _, gold = _run(cfg, params, prompts, max_new=10)
+    chaos = ChaosInjector([Fault("device_fault", step=3, slot=0)])
+    eng = Engine(params, cfg, slots=2, max_seq=64, chaos=chaos,
+                 spec=_spec(cfg, params, "draft_model"))
+    assert isinstance(eng._drafter, DraftModelDrafter)
+    orig_restore = eng._drafter.restore_slot
+    roundtrips = []
+
+    def checked_restore(slot, saved):
+        orig_restore(slot, saved)
+        after = eng._drafter.snapshot_slot(slot)
+        roundtrips.append(all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(saved),
+                            jax.tree.leaves(after))))
+
+    eng._drafter.restore_slot = checked_restore
+    rs = [Request(rid=i, prompt=p.copy(), max_new_tokens=10)
+          for i, p in enumerate(prompts)]
+    for r in rs:
+        eng.submit(r)
+    eng.run()
+    assert chaos.exhausted
+    reasons = sorted(r.finish_reason for r in rs)
+    assert reasons == ["done", "done", "done", "failed"]
+    assert roundtrips and all(roundtrips), \
+        "drafter cache rows must restore byte-for-byte"
+    for r in rs:
+        if r.finish_reason == "done":
+            assert list(r.out_tokens) == gold[r.rid], \
+                f"survivor {r.rid} diverged after recovery"
+    s = eng.stats()
+    assert s["recoveries"] == 1 and s["failed"] == 1
+    assert s["readbacks"] == s["steps"]
+    eng._pool.check()
+
+
+def test_spec_inert_on_contiguous_and_moe():
+    """Layouts that cannot speculate (contiguous pool: no trap page; moe
+    serves contiguous) leave the config silently inert: zero counters,
+    streams identical to a spec-less run."""
+    for cfg, params, kw in (
+            (*_setup("qwen2-0.5b"),
+             dict(cache_manager=CacheConfig(paged=False))),
+            (*_setup("olmoe-1b-7b"), {})):
+        prompts = _prompts(cfg, n=3, length=8, seed=8)
+        _, gold = _run(cfg, params, prompts, max_new=5, **kw)
+        eng, out = _run(cfg, params, prompts, max_new=5,
+                        spec=SpecConfig(drafter="ngram", k=3), **kw)
+        s = eng.stats()
+        assert not s["spec_on"]
+        assert s["draft_tokens"] == 0 and s["accepted_per_step"] == 0.0
+        assert out == gold
+
+
+# -- facade + API surface ----------------------------------------------------
+
+def test_llm_engine_reports_accepted_tokens():
+    """LLMEngine(spec=...) surfaces per-request accepted_tokens on
+    RequestOutput, matching the engine counters; streams equal no-spec."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, n=3, length=10, seed=9)
+    plain = LLMEngine(params, cfg, slots=3, max_seq=64)
+    gold = plain.generate(prompts, max_new_tokens=8)
+    llm = LLMEngine(params, cfg, slots=3, max_seq=64,
+                    spec=_spec(cfg, params, "draft_model"))
+    outs = llm.generate(prompts, max_new_tokens=8)
+    assert [o.tokens for o in outs] == [o.tokens for o in gold]
+    assert all(o.accepted_tokens == 0 for o in gold)
+    assert sum(o.accepted_tokens for o in outs) \
+        == llm.engine.stats()["accepted_tokens"]
+    assert any(o.accepted_tokens > 0 for o in outs)
+
+
+def test_stream_one_event_per_accepted_token():
+    """A spec step can land several tokens at once, but stream() still
+    yields exactly one in-order TokenEvent per accepted token — spec-off
+    consumers see no behavioral change."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, n=2, length=10, seed=10)
+    llm = LLMEngine(params, cfg, slots=2, max_seq=64,
+                    spec=_spec(cfg, params, "draft_model"))
+    per = {}
+    for ev in llm.stream(prompts, max_new_tokens=6):
+        assert ev.token >= 0
+        assert ev.index == per.get(ev.rid, 0), "per-token, in order"
+        per[ev.rid] = ev.index + 1
+        if ev.done:
+            assert ev.accepted_tokens > 0
+    assert per and all(n == 6 for n in per.values())
+
+
+def test_reference_engine_rejects_spec():
+    """The host-driven oracle cannot speculate; passing a SpecConfig is a
+    typed error, not a silent ignore."""
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="target-only oracle"):
+        ReferenceEngine(params, cfg, slots=2, max_seq=64,
+                        spec=SpecConfig(drafter="ngram"))
+
+
+def test_spec_rejects_non_greedy_at_admission():
+    """Sampling requests cannot serve under spec (the verify commits
+    argmax agreement only): rejected up front with a typed reason."""
+    cfg, params = _setup()
+    eng = Engine(params, cfg, slots=2, max_seq=64,
+                 spec=_spec(cfg, params, "ngram"))
+    req = Request(rid=0, prompt=_prompts(cfg, n=1)[0], max_new_tokens=4,
+                  sampling=SamplingParams(temperature=0.7))
+    eng.submit(req)
+    assert req.finish_reason == "rejected"
+    assert "greedy" in req.error
+    assert eng.stats()["rejected"] == 1
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="drafter="):
+        SpecConfig(drafter="oracle")
+    with pytest.raises(ValueError, match="k=0"):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError, match="ngram=0"):
+        SpecConfig(ngram=0)
+    with pytest.raises(ValueError, match="draft_params"):
+        SpecConfig(drafter="draft_model")
+
+
+def test_make_drafter_rejects_frames_and_vocab_mismatch():
+    cfg, params = _setup()
+    frames = dataclasses.replace(configs.smoke("seamless-m4t-large-v2"))
+    with pytest.raises(ValueError, match="frames"):
+        make_drafter(SpecConfig(drafter="draft_model", k=2,
+                                draft_params=params, draft_cfg=frames),
+                     cfg, slots=2, max_seq=64)
+    small_vocab = dataclasses.replace(cfg, vocab=cfg.vocab // 2)
+    with pytest.raises(ValueError, match="vocab"):
+        make_drafter(SpecConfig(drafter="draft_model", k=2,
+                                draft_params=params,
+                                draft_cfg=small_vocab),
+                     cfg, slots=2, max_seq=64)
+
+
+def test_write_mask_requires_paged_layout():
+    """The trap-page trick needs the paged pool; the contiguous decode
+    surface refuses a write_mask instead of silently dropping it."""
+    cfg, _ = _setup()
+    with pytest.raises(ValueError, match="trap page"):
+        registry.decode_cached(None, cfg, None, None, None,
+                               write_mask=np.ones((2,), bool))
+
+
+def test_ngram_drafter_prompt_lookup():
+    """The n-gram drafter proposes the continuation of a repeated prompt
+    pattern (host-side, stateless — exact by construction)."""
+    d = NGramDrafter(k=3, ngram=2)
+    assert not d.stateful
+    ctx = np.array([5, 6, 7, 8, 5, 6], dtype=np.int32)
+    np.testing.assert_array_equal(d._lookup(ctx), [7, 8, 5])
+    # no match anywhere -> zeros fallback, never garbage
+    cold = d._lookup(np.array([1, 2, 3], dtype=np.int32))
+    assert cold.shape == (3,) and (cold == 0).all()

@@ -3,9 +3,10 @@
 Scans the repo's prose surfaces —
 
 * ``README.md`` and every ``docs/*.md``
-* the module docstrings of ``src/repro/sharding/*.py`` and
-  ``src/repro/serving/*.py`` (the packages whose docstrings carry
-  cross-references, enforced by the ruff ``D`` rules)
+* the module docstrings of ``src/repro/sharding/*.py``,
+  ``src/repro/serving/*.py``, and ``src/repro/serving/spec/*.py`` (the
+  packages whose docstrings carry cross-references, enforced by the ruff
+  ``D`` rules)
 
 — and checks two kinds of reference:
 
@@ -48,7 +49,8 @@ SOURCE_EXTS = (".py", ".md", ".json", ".yml", ".yaml", ".toml", ".txt",
 # paths produced by running the benchmarks, not committed
 GENERATED_PREFIXES = ("benchmarks/artifacts",)
 
-DOCSTRING_GLOBS = ("src/repro/sharding", "src/repro/serving")
+DOCSTRING_GLOBS = ("src/repro/sharding", "src/repro/serving",
+                   "src/repro/serving/spec")
 
 
 def _is_pathlike(token: str) -> bool:
